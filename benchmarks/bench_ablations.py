@@ -1,0 +1,56 @@
+"""Beyond-paper ablations of FedDCT's own hyper-parameters:
+timeout tolerance beta, evaluation rounds kappa, tier count M, and the
+Dirichlet partitioner (alternative non-iid model).
+
+    PYTHONPATH=src python -m benchmarks.bench_ablations
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+from repro.config.base import FLConfig
+from repro.core import run_method
+from repro.fl.client import CNNTrainer, build_fl_clients
+from repro.fl.network import WirelessNetwork
+
+S = dict(n_clients=20, tau=3, rounds=25, mu=0.2, primary_frac=0.7, seed=0,
+         lr=0.003)
+
+
+def _run(tag, **kw):
+    cfg = dict(S)
+    cfg.update(kw)
+    fl = FLConfig(**cfg)
+    net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                          fl.mu, fl.failure_delay, fl.seed)
+    tr = build_fl_clients("cnn-mnist", fl, scale=0.02)
+    h = run_method("feddct", tr, net, fl, eval_every=5)
+    rec = {"tag": tag, "best_acc": h.best_accuracy(smooth=1),
+           "total_time": h.times[-1],
+           "stragglers": sum(h.n_stragglers)}
+    print(f"[ablate] {tag:18s} acc={rec['best_acc']:.4f} "
+          f"T={rec['total_time']:7.1f}s stragglers={rec['stragglers']}",
+          flush=True)
+    return rec
+
+
+def main():
+    out = []
+    for beta in (1.0, 1.2, 1.5, 2.0):
+        out.append(_run(f"beta={beta}", beta=beta))
+    for kappa in (1, 2, 3):
+        out.append(_run(f"kappa={kappa}", kappa=kappa))
+    for m in (2, 5, 10):
+        out.append(_run(f"M={m}", n_tiers=m))
+    for omega in (15.0, 30.0, 60.0):
+        out.append(_run(f"omega={omega}", omega=omega))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "ablations.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Paper Figs. 5-9: non-iid sweep, failure-probability sweep, complex
+network, stable network, tier trace.  One function per figure; ``--ci``
+scales sizes down for a single CPU."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, run_fl_experiment
+
+METHODS = ["fedavg", "tifl", "fedasync", "feddct"]
+
+
+def _save(name, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def fig5_noniid(ci=True):
+    """CIFAR/#: data-heterogeneity sweep at mu=0.1 (paper Fig. 5)."""
+    s = dict(rounds=20, n_clients=20, tau=3, scale=0.02) if ci else \
+        dict(rounds=250, n_clients=50, tau=5, scale=0.2)
+    arch = "cnn-mnist" if ci else "resnet8-cifar10"
+    out = {}
+    for frac in (0.1, 0.3, 0.7):         # 0.1 ~ iid
+        for m in METHODS:
+            h = run_fl_experiment(arch=arch, method=m, mu=0.1,
+                                  primary_frac=frac, **s)
+            out[f"{m}_frac{frac}"] = {"acc": h.accuracy, "t": h.times}
+            print(f"[fig5] frac={frac} {m:9s} best={h.best_accuracy():.4f}",
+                  flush=True)
+    _save("fig5_noniid", out)
+    return out
+
+
+def fig6_mu(ci=True):
+    """Failure-probability sweep (paper Fig. 6)."""
+    s = dict(rounds=20, n_clients=20, tau=3, scale=0.02) if ci else \
+        dict(rounds=250, n_clients=50, tau=5, scale=0.2)
+    arch = "cnn-mnist" if ci else "resnet8-cifar10"
+    out = {}
+    for mu in (0.0, 0.2, 0.4):
+        for m in METHODS:
+            h = run_fl_experiment(arch=arch, method=m, mu=mu,
+                                  primary_frac=0.5, **s)
+            out[f"{m}_mu{mu}"] = {"acc": h.accuracy, "t": h.times}
+            print(f"[fig6] mu={mu} {m:9s} best={h.best_accuracy():.4f} "
+                  f"T={h.times[-1]:.0f}s", flush=True)
+    _save("fig6_mu", out)
+    return out
+
+
+def fig7_complex(ci=True):
+    """Wider resource spread: delays {1,3,10,30,100} (paper Fig. 7)."""
+    s = dict(rounds=20, n_clients=20, tau=3, scale=0.02) if ci else \
+        dict(rounds=250, n_clients=50, tau=5, scale=0.2)
+    out = {}
+    for m in METHODS:
+        h = run_fl_experiment(arch="cnn-fmnist", method=m, mu=0.1,
+                              primary_frac=0.7,
+                              tier_delay_means=(1.0, 3.0, 10.0, 30.0, 100.0),
+                              **s)
+        out[m] = {"acc": h.accuracy, "t": h.times}
+        print(f"[fig7] {m:9s} best={h.best_accuracy():.4f} "
+              f"T={h.times[-1]:.0f}s", flush=True)
+    _save("fig7_complex", out)
+    return out
+
+
+def fig8_stable(ci=True):
+    """Stable network (mu=0): isolates the cross-tier selection gain
+    (paper Fig. 8)."""
+    s = dict(rounds=20, n_clients=20, tau=3, scale=0.02) if ci else \
+        dict(rounds=250, n_clients=50, tau=5, scale=0.2)
+    out = {}
+    for m in METHODS:
+        h = run_fl_experiment(arch="cnn-mnist", method=m, mu=0.0,
+                              primary_frac=0.7, **s)
+        out[m] = {"acc": h.accuracy, "t": h.times}
+        print(f"[fig8] {m:9s} best={h.best_accuracy():.4f} "
+              f"T={h.times[-1]:.0f}s", flush=True)
+    _save("fig8_stable", out)
+    return out
+
+
+def fig9_tier_trace(ci=True):
+    """Selected-tier trend over training (paper Fig. 9)."""
+    s = dict(rounds=40, n_clients=20, tau=3, scale=0.02) if ci else \
+        dict(rounds=400, n_clients=50, tau=5, scale=0.2)
+    h = run_fl_experiment(arch="cnn-mnist", method="feddct", mu=0.1,
+                          primary_frac=0.7, **s)
+    # linear fit like the paper
+    t = np.arange(len(h.tier))
+    slope = float(np.polyfit(t, h.tier, 1)[0]) if len(h.tier) > 3 else 0.0
+    out = {"tier": h.tier, "rounds": h.rounds, "slope": slope}
+    print(f"[fig9] tier trace slope={slope:+.4f} "
+          f"(paper: positive — tiers drift up)", flush=True)
+    _save("fig9_tier_trace", out)
+    return out
+
+
+ALL = {"fig5": fig5_noniid, "fig6": fig6_mu, "fig7": fig7_complex,
+       "fig8": fig8_stable, "fig9": fig9_tier_trace}
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    a = ap.parse_args()
+    for name, fn in ALL.items():
+        if a.only and name != a.only:
+            continue
+        fn(ci=not a.full)

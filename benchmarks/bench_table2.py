@@ -1,0 +1,59 @@
+"""Paper Table 2: best accuracy + time-to-preset-accuracy, per method.
+
+Full paper setting: 50 clients, mu=0.1, CNN/ResNet on three datasets,
+#=0.7 column (plus CIFAR non-iid sweep in bench_fig5).  ``--ci`` shrinks
+everything so the table finishes in minutes on 1 CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, run_fl_experiment
+
+METHODS = ["fedavg", "tifl", "fedasync", "feddct"]
+
+
+def run(ci: bool = True, mu: float = 0.1, primary_frac: float = 0.7):
+    if ci:
+        settings = dict(rounds=25, n_clients=20, tau=3, scale=0.02,
+                        eval_every=1)
+        workloads = [("cnn-mnist", 0.35), ("cnn-fmnist", 0.30)]
+    else:
+        settings = dict(rounds=300, n_clients=50, tau=5, scale=0.2,
+                        eval_every=2)
+        workloads = [("cnn-mnist", 0.90), ("cnn-fmnist", 0.75),
+                     ("resnet8-cifar10", 0.55)]
+    rows = []
+    for arch, target in workloads:
+        for method in METHODS:
+            h = run_fl_experiment(arch=arch, method=method, mu=mu,
+                                  primary_frac=primary_frac, **settings)
+            t_target = h.time_to_accuracy(target)
+            rows.append({
+                "dataset": arch, "method": method,
+                "best_acc": round(h.best_accuracy(smooth=3), 4),
+                "time_to_target_s":
+                    round(t_target, 1) if t_target else None,
+                "target": target,
+                "total_time_s": round(h.times[-1], 1),
+            })
+            print(f"[table2] {arch:16s} {method:9s} "
+                  f"acc={rows[-1]['best_acc']:.4f} "
+                  f"t@{target}={rows[-1]['time_to_target_s']} "
+                  f"total={rows[-1]['total_time_s']}s", flush=True)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "table2.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    run(ci=not a.full)

@@ -1,0 +1,41 @@
+"""Medium-scale Table 2 (closer to paper dynamics than --ci, feasible on
+1 CPU): 50 clients, 150 rounds, tau=5, mu=0.1, #=0.7.  The cross-tier
+selection effect needs >~50 rounds to surface (the tier pointer has to
+climb, Fig. 9), which the CI-scale run is too short for."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, run_fl_experiment
+
+METHODS = ["fedavg", "tifl", "fedasync", "feddct"]
+SETTINGS = dict(rounds=150, n_clients=50, tau=5, scale=0.05, eval_every=2,
+                mu=0.1, primary_frac=0.7)
+TARGETS = {"cnn-mnist": 0.60, "cnn-fmnist": 0.45}
+
+
+def run(workloads=("cnn-mnist", "cnn-fmnist")):
+    rows = []
+    for arch in workloads:
+        for method in METHODS:
+            h = run_fl_experiment(arch=arch, method=method,
+                                  tag=f"medium_{method}_{arch}", **SETTINGS)
+            tt = h.time_to_accuracy(TARGETS[arch])
+            rows.append({"dataset": arch, "method": method,
+                         "best_acc": round(h.best_accuracy(smooth=3), 4),
+                         "time_to_target_s": round(tt, 1) if tt else None,
+                         "target": TARGETS[arch],
+                         "total_time_s": round(h.times[-1], 1)})
+            print(f"[table2-med] {arch:12s} {method:9s} "
+                  f"acc={rows[-1]['best_acc']:.4f} "
+                  f"t@{TARGETS[arch]}={rows[-1]['time_to_target_s']} "
+                  f"total={rows[-1]['total_time_s']}", flush=True)
+    with open(os.path.join(RESULTS_DIR, "table2_medium.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

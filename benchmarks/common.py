@@ -1,0 +1,60 @@
+"""Shared benchmark helpers: FL experiment runner + timing utilities."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config.base import FLConfig
+from repro.core import run_method
+from repro.fl.client import build_fl_clients
+from repro.fl.network import WirelessNetwork
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run_fl_experiment(*, arch: str, method: str, mu: float,
+                      primary_frac: float, rounds: int, n_clients: int = 50,
+                      tau: int = 5, n_tiers: int = 5, scale: float = 0.05,
+                      seed: int = 0, lr: float = 0.003,
+                      tier_delay_means=(5.0, 10.0, 15.0, 20.0, 25.0),
+                      target_accuracy: float = 0.0, eval_every: int = 1,
+                      tag: Optional[str] = None, force: bool = False):
+    """Run one (method x setting) cell with caching to results/fl/."""
+    tag = tag or (f"{method}_{arch}_mu{mu}_frac{primary_frac}_r{rounds}"
+                  f"_c{n_clients}_s{seed}_sc{scale}"
+                  f"_d{'-'.join(str(x) for x in tier_delay_means)}")
+    os.makedirs(os.path.join(RESULTS_DIR, "fl"), exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "fl", tag + ".json")
+    if os.path.exists(path) and not force:
+        from repro.fl.metrics import RunHistory
+        return RunHistory.load(path)
+    fl = FLConfig(n_clients=n_clients, n_tiers=n_tiers, tau=tau,
+                  rounds=rounds, mu=mu, primary_frac=primary_frac,
+                  seed=seed, lr=lr, tier_delay_means=tuple(tier_delay_means),
+                  target_accuracy=target_accuracy)
+    net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                          fl.mu, fl.failure_delay, fl.seed)
+    trainer = build_fl_clients(arch, fl, scale=scale)
+    hist = run_method(method, trainer, net, fl, eval_every=eval_every)
+    hist.save(path)
+    return hist
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall microseconds per call (pre-jitted fns)."""
+    import jax
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

@@ -1,0 +1,64 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSON records in results/dryrun/."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["granite-20b", "nemotron-4-340b", "phi4-mini-3.8b",
+              "llama3.2-1b", "mixtral-8x7b", "hubert-xlarge", "hymba-1.5b",
+              "arctic-480b", "xlstm-350m", "chameleon-34b"]
+
+
+def load(dryrun_dir=None):
+    d = dryrun_dir or os.path.join(RESULTS_DIR, "dryrun")
+    recs = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_row(r):
+    if r.get("status") == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | {r['reason'].split('(')[0].strip()} |")
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | {r.get('error','?')[:40]} |")
+    t = r["roofline"]
+    return ("| {arch} | {shape} | {mesh} | {c:.4f} | {m:.4f} | {x:.4f} | "
+            "{dom} | {u:.2f} | {var} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=t["compute_s"], m=t["memory_s"], x=t["collective_s"],
+                dom=t["dominant"].replace("_s", ""),
+                u=t["useful_ratio"], var=r.get("variant", "")))
+
+
+def render(mesh="16x16", dryrun_dir=None) -> str:
+    recs = load(dryrun_dir)
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+        " | dominant | useful | variant |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r:
+                lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--dir", default=None)
+    a = ap.parse_args()
+    print(render(a.mesh, a.dir))

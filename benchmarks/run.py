@@ -1,0 +1,179 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV.  The fast micro-suite times the
+framework's hot paths (aggregation kernel, attention paths, SSM scan,
+tiering/selection control plane, CNN train step) and summarizes the
+paper-figure experiments if their cached results exist.  ``--paper``
+additionally runs the Table-2 + Fig-5..9 reproductions (CI scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, time_fn
+
+
+def bench_fedagg():
+    from repro.core.aggregation import weighted_average
+    n, p = 25, 500_000
+    rng = np.random.default_rng(0)
+    updates = [{"w": jnp.asarray(rng.normal(size=p).astype(np.float32))}
+               for _ in range(n)]
+    sizes = list(rng.uniform(50, 150, n))
+    us = time_fn(lambda: weighted_average(updates, sizes)["w"], iters=10)
+    yield ("fedagg_jnp_25x500k", us, f"{n*p*4/1e6:.0f}MB_reduced")
+    from repro.kernels import fedagg_op
+    flat = jnp.stack([u["w"] for u in updates])
+    us2 = time_fn(lambda: fedagg_op(flat, jnp.asarray(sizes, jnp.float32)),
+                  iters=3, warmup=1)
+    yield ("fedagg_pallas_interp_25x500k", us2, "interpret_mode")
+
+
+def bench_attention():
+    from repro.models.attention import (banded_attention, chunked_attention,
+                                        naive_attention)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, d = 1, 1024, 8, 64
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+    fn_n = jax.jit(lambda q, k, v: naive_attention(q, k, v, causal=True))
+    fn_c = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, chunk_q=256, chunk_kv=256))
+    fn_b = jax.jit(lambda q, k, v: banded_attention(
+        q, k, v, window=256, chunk_q=256, chunk_kv=256))
+    flops = 4 * b * h * s * s * d / 2
+    yield ("attn_naive_1k", time_fn(lambda: fn_n(q, k, v), iters=10),
+           f"{flops/1e9:.1f}GF")
+    yield ("attn_flashchunked_1k", time_fn(lambda: fn_c(q, k, v), iters=10),
+           f"{flops/1e9:.1f}GF")
+    yield ("attn_banded_w256_1k", time_fn(lambda: fn_b(q, k, v), iters=10),
+           "O(S*W)")
+
+
+def bench_ssm():
+    from repro.models.ssm import init_ssm, ssm_forward
+    p = init_ssm(jax.random.PRNGKey(0), 256, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 256), jnp.float32)
+    fn = jax.jit(lambda x: ssm_forward(p, x, n_state=16, chunk=128)[0])
+    yield ("ssm_chunked_512x512", time_fn(lambda: fn(x), iters=10), "chunk128")
+
+
+def bench_mlstm():
+    from repro.models.xlstm import init_mlstm, mlstm_block
+    p = init_mlstm(jax.random.PRNGKey(0), 256, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 512, 256), jnp.float32)
+    fn = jax.jit(lambda x: mlstm_block(p, x, 4, chunk=128)[0])
+    yield ("mlstm_chunkwise_512", time_fn(lambda: fn(x), iters=10), "chunk128")
+
+
+def bench_control_plane():
+    from repro.core.selection import cstt
+    from repro.core.tiering import tiering
+    rng = np.random.default_rng(0)
+    at = {c: float(rng.uniform(1, 30)) for c in range(1000)}
+    ct = {c: int(rng.integers(0, 50)) for c in range(1000)}
+    import time as _t
+    t0 = _t.perf_counter()
+    for _ in range(100):
+        ts = tiering(at, 200)
+    us = (_t.perf_counter() - t0) / 100 * 1e6
+    yield ("tiering_1000clients", us, "alg3")
+    ts = tiering(at, 200)
+    t0 = _t.perf_counter()
+    for i in range(100):
+        cstt(3, 0.5, 0.6, ts, at, ct, 5, 1.2, 30.0,
+             np.random.default_rng(i))
+    us = (_t.perf_counter() - t0) / 100 * 1e6
+    yield ("cstt_1000clients", us, "alg4")
+
+
+def bench_cnn_step():
+    from repro.config import get_arch
+    from repro.models.cnn import cnn_loss, init_cnn
+    cfg = get_arch("cnn-mnist")
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (10, 28, 28, 1))
+    y = jnp.zeros((10,), jnp.int32)
+    grad = jax.jit(jax.grad(lambda p: cnn_loss(cfg, p, {"x": x, "y": y})))
+    yield ("cnn_mnist_grad_b10", time_fn(lambda: grad(params), iters=10),
+           "paper_batch")
+
+
+def bench_lm_step():
+    from repro.config import get_arch
+    from repro.config.base import TrainConfig
+    from repro.launch.steps import make_train_step
+    from repro.models import init_model
+    cfg = get_arch("llama3.2-1b").reduced()
+    tcfg = TrainConfig(dtype="float32", remat=False, attn_chunk_q=64,
+                       attn_chunk_kv=64)
+    params = init_model(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    step, opt = make_train_step(cfg, tcfg)
+    opt_state = opt.init(params)
+    batch = {"tokens": jnp.ones((4, 128), jnp.int32)}
+    jstep = jax.jit(step)
+    def run():
+        p, o, m = jstep(params, opt_state, batch)
+        return m["loss"]
+    yield ("llama_reduced_train_b4s128", time_fn(run, iters=5, warmup=2),
+           "fwd+bwd+adamw")
+
+
+def summarize_dryrun():
+    d = os.path.join(RESULTS_DIR, "dryrun")
+    if not os.path.isdir(d):
+        return
+    import glob
+    n_ok = n_skip = n_err = 0
+    worst = (None, 0.0)
+    for p in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(p))
+        st = r.get("status")
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_err += st == "error"
+        if st == "ok" and r["roofline"]["bound_s"] > worst[1]:
+            worst = (f"{r['arch']}/{r['shape']}/{r['mesh']}",
+                     r["roofline"]["bound_s"])
+    yield ("dryrun_matrix", 0.0, f"ok={n_ok} skip={n_skip} err={n_err}")
+    if worst[0]:
+        yield ("dryrun_worst_bound", worst[1] * 1e6, worst[0])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="also run Table2 + Fig5-9 repro (CI scale)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale repro (hours)")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    suites = [bench_fedagg, bench_attention, bench_ssm, bench_mlstm,
+              bench_control_plane, bench_cnn_step, bench_lm_step,
+              summarize_dryrun]
+    for suite in suites:
+        try:
+            for name, us, derived in suite():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{suite.__name__},-1,ERROR:{e!r}", flush=True)
+
+    if args.paper or args.full:
+        from benchmarks.bench_table2 import run as table2
+        from benchmarks import bench_figs
+        table2(ci=not args.full)
+        for fn in bench_figs.ALL.values():
+            fn(ci=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""FedDCT as a datacenter scheduler: the paper's algorithm coordinating
+*LLM* clients (reduced configs of the assigned architectures), not CNNs.
+
+Each "client" performs a real train step on its own token shard; the
+wireless model supplies heterogeneous virtual step times.  This is the
+DESIGN.md §2 embodiment where tiers = replica groups of a pod.
+
+    PYTHONPATH=src python examples/multi_arch_fl.py
+"""
+
+from repro.config.base import FLConfig
+from repro.core import run_method
+from repro.fl.client import build_fl_clients
+from repro.fl.network import WirelessNetwork
+
+
+def main():
+    for arch in ("llama3.2-1b", "xlstm-350m", "hymba-1.5b"):
+        fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.2,
+                      primary_frac=0.7, seed=0, lr=1e-3)
+        net = WirelessNetwork(fl.n_clients, fl.tier_delay_means,
+                              fl.delay_std, fl.mu, fl.failure_delay, fl.seed)
+        trainer = build_fl_clients(arch, fl)       # reduced LM trainer
+        hist = run_method("feddct", trainer, net, fl)
+        print(f"{arch:14s} next-token acc {hist.accuracy[0]:.4f} -> "
+              f"{hist.accuracy[-1]:.4f}  virtual {hist.times[-1]:.0f}s "
+              f"tiers={hist.tier}")
+
+
+if __name__ == "__main__":
+    main()

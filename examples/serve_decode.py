@@ -1,0 +1,12 @@
+"""Batched-request serving example: prefill + KV-cache decode for any
+decodable assigned architecture (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Pytree checkpointing to .npz (atomic, step-indexed, pure numpy).
+
+Pytrees are flattened with ``jax.tree_util`` path strings as keys so any
+nested dict/tuple/list of arrays round-trips, including optimizer state
+and FL server state.  Scalars/ints are stored as 0-d arrays.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    meta = {"step": step, "n_leaves": len(leaves)}
+    if metadata:
+        meta.update(metadata)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for a, b in zip(leaves, restored):
+        if tuple(np.shape(a)) != tuple(b.shape):
+            raise ValueError(f"shape mismatch: {np.shape(a)} vs {b.shape}")
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

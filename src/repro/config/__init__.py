@@ -1,0 +1,21 @@
+from repro.config.base import (
+    ModelConfig,
+    FLConfig,
+    MeshConfig,
+    TrainConfig,
+    InputShape,
+    register_arch,
+    get_arch,
+    list_archs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "FLConfig",
+    "MeshConfig",
+    "TrainConfig",
+    "InputShape",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+]

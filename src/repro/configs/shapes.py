@@ -1,0 +1,3 @@
+"""Assigned input shapes (re-exported from config.base for convenience)."""
+
+from repro.config.base import INPUT_SHAPES, InputShape  # noqa: F401

@@ -1,0 +1,39 @@
+"""Server-side model aggregation (Alg. 1 line 8 / Alg. 2 last line).
+
+``weighted_average`` stacks client updates and reduces with either plain
+jnp einsum or the fused Pallas fedagg kernel (TPU hot path; interpret
+mode on CPU).  ``staleness_merge`` is FedAsync's two-model blend.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(param_list: Sequence, sizes: Sequence[float],
+                     use_kernel: bool = False):
+    """FedAvg: sum_c w_c * s_c / sum(s)."""
+    if len(param_list) == 0:
+        raise ValueError("no client updates to aggregate")
+    w = jnp.asarray(np.asarray(sizes, np.float32))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *param_list)
+    if use_kernel:
+        from repro.kernels import fedagg_pytree
+        return fedagg_pytree(stacked, w)
+    wn = w / jnp.maximum(w.sum(), 1e-30)
+    def agg(leaf):
+        wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * wb, axis=0).astype(leaf.dtype)
+    return jax.tree_util.tree_map(agg, stacked)
+
+
+def staleness_merge(global_params, client_params, alpha_t: float):
+    """FedAsync: w <- (1-a) w + a w_c."""
+    return jax.tree_util.tree_map(
+        lambda g, c: ((1 - alpha_t) * g.astype(jnp.float32)
+                      + alpha_t * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)

@@ -1,0 +1,214 @@
+"""Baseline FL methods the paper compares against (§5.1).
+
+* FedAvg  [McMahan'17]: random tau clients per round; server waits for
+  every selected client (failures hurt: round = max client time).
+* TiFL    [Chai'20]: one-off profiling -> STATIC tiers; clients whose
+  profiled time >= Omega are dropped for good; credit + accuracy based
+  adaptive tier selection; round capped at Omega (slower uploads lost).
+* FedAsync [Xie'19]: fully asynchronous, staleness-weighted merge
+  alpha_t = alpha * (t - tau_i + 1)^(-a); event-queue virtual clock.
+
+All three share the trainer + WirelessNetwork realization with FedDCT.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import FLConfig
+from repro.core.aggregation import staleness_merge, weighted_average
+from repro.core.tiering import evaluate_client, tiering
+from repro.fl.metrics import RunHistory
+
+
+def run_fedavg(trainer, network, fl: FLConfig, *, verbose: bool = False,
+               eval_every: int = 1) -> RunHistory:
+    rng = np.random.default_rng(fl.seed + 11)
+    hist = RunHistory(method="fedavg", arch=trainer.cfg.arch_id,
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac})
+    params = trainer.init_params(fl.seed)
+    clock = 0.0
+    for rnd in range(1, fl.rounds + 1):
+        sel = rng.choice(fl.n_clients, size=min(fl.tau, fl.n_clients),
+                         replace=False)
+        updates, sizes, times = [], [], []
+        for c in sel:
+            st = network.delay(int(c), rnd)
+            times.append(st)
+            new_p, s_c = trainer.local_train(params, int(c), rnd_seed=rnd)
+            updates.append(new_p)
+            sizes.append(s_c)
+        params = weighted_average(updates, sizes)
+        clock += max(times)                      # waits for everyone
+        if rnd % eval_every == 0:
+            acc = trainer.evaluate(params)
+            hist.record(time=clock, rnd=rnd, acc=acc,
+                        n_selected=len(sel))
+            if verbose:
+                print(f"[fedavg] r={rnd:4d} t={clock:9.1f}s acc={acc:.4f}")
+            if fl.target_accuracy and acc >= fl.target_accuracy:
+                break
+    return hist
+
+
+def run_tifl(trainer, network, fl: FLConfig, *, verbose: bool = False,
+             eval_every: int = 1) -> RunHistory:
+    rng = np.random.default_rng(fl.seed + 13)
+    hist = RunHistory(method="tifl", arch=trainer.cfg.arch_id,
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac})
+    params = trainer.init_params(fl.seed)
+    clock = 0.0
+
+    # one-off profiling (static tiers; >=Omega dropped permanently — the
+    # behaviour the paper criticises when mu>0 mis-classifies clients)
+    at: Dict[int, float] = {}
+    spent_all = []
+    for c in range(fl.n_clients):
+        t_avg, spent = evaluate_client(network, c, rnd=0, kappa=fl.kappa,
+                                       omega=fl.omega)
+        spent_all.append(spent)
+        if t_avg < fl.omega:
+            at[c] = t_avg
+    clock += max(spent_all)
+    m = max(fl.n_clients // fl.n_tiers, 1)
+    tiers = tiering(at, m)
+    n_tiers = len(tiers)
+    credits = [fl.rounds // max(n_tiers, 1) + 1] * n_tiers
+    tier_acc = [0.0] * n_tiers
+    probs = np.ones(n_tiers) / max(n_tiers, 1)
+
+    for rnd in range(1, fl.rounds + 1):
+        live = [k for k in range(n_tiers) if credits[k] > 0 and tiers[k]]
+        if not live:
+            live = [k for k in range(n_tiers) if tiers[k]]
+        p = np.array([probs[k] for k in live], np.float64)
+        p = p / p.sum() if p.sum() > 0 else np.ones(len(live)) / len(live)
+        k = int(rng.choice(live, p=p))
+        credits[k] -= 1
+        members = tiers[k]
+        sel = rng.choice(members, size=min(fl.tau, len(members)),
+                         replace=False)
+        updates, sizes, times = [], [], []
+        for c in sel:
+            st = network.delay(int(c), rnd)
+            times.append(min(st, fl.omega))
+            if st >= fl.omega:               # lost this round
+                continue
+            new_p, s_c = trainer.local_train(params, int(c), rnd_seed=rnd)
+            updates.append(new_p)
+            sizes.append(s_c)
+        if updates:
+            params = weighted_average(updates, sizes)
+        clock += max(times) if times else 0.0
+        acc = trainer.evaluate(params) if rnd % eval_every == 0 else None
+        if acc is not None:
+            tier_acc[k] = acc
+            # adaptive: favour tiers with lower observed accuracy (TiFL §4)
+            inv = np.array([1.0 - a for a in tier_acc], np.float64)
+            probs = inv / inv.sum() if inv.sum() > 0 else probs
+            hist.record(time=clock, rnd=rnd, acc=acc, tier=k + 1,
+                        n_selected=len(sel),
+                        n_stragglers=len(sel) - len(updates))
+            if verbose:
+                print(f"[tifl]   r={rnd:4d} t={clock:9.1f}s tier={k+1} "
+                      f"acc={acc:.4f}")
+            if fl.target_accuracy and acc >= fl.target_accuracy:
+                break
+    return hist
+
+
+def run_fedasync(trainer, network, fl: FLConfig, *, verbose: bool = False,
+                 eval_every: int = 5) -> RunHistory:
+    hist = RunHistory(method="fedasync", arch=trainer.cfg.arch_id,
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                            "alpha": fl.async_alpha, "a": fl.async_a})
+    params = trainer.init_params(fl.seed)
+    clock = 0.0
+    version = 0
+    # true async: each client trains from the global model snapshot taken
+    # when it STARTED (not finished) — that is what staleness weights fix.
+    snapshot: Dict[int, object] = {c: params for c in range(fl.n_clients)}
+    # event queue: (finish_time, client, model_version_at_start, round_idx)
+    heap: List = []
+    for c in range(fl.n_clients):
+        heapq.heappush(heap, (network.delay(c, 0), c, 0, 0))
+    # budget: same number of aggregations as sync methods have rounds*tau
+    max_updates = fl.rounds * fl.tau
+    for upd in range(1, max_updates + 1):
+        finish, c, v0, ridx = heapq.heappop(heap)
+        clock = finish
+        new_p, _ = trainer.local_train(snapshot[c], c,
+                                       rnd_seed=ridx * 977 + c)
+        staleness = version - v0
+        if fl.async_staleness == "poly":
+            alpha_t = fl.async_alpha * (staleness + 1.0) ** (-fl.async_a)
+        else:
+            alpha_t = fl.async_alpha
+        params = staleness_merge(params, new_p, alpha_t)
+        version += 1
+        snapshot[c] = params
+        heapq.heappush(heap, (clock + network.delay(c, ridx + 1), c,
+                              version, ridx + 1))
+        if upd % eval_every == 0:
+            acc = trainer.evaluate(params)
+            hist.record(time=clock, rnd=upd, acc=acc, n_selected=1)
+            if verbose:
+                print(f"[fedasync] u={upd:5d} t={clock:9.1f}s acc={acc:.4f}")
+            if fl.target_accuracy and acc >= fl.target_accuracy:
+                break
+    return hist
+
+
+def run_method(method: str, trainer, network, fl: FLConfig, **kw
+               ) -> RunHistory:
+    from repro.core.scheduler import run_feddct
+    fns = {"feddct": run_feddct, "fedavg": run_fedavg, "tifl": run_tifl,
+           "fedasync": run_fedasync, "fedprox": run_fedprox}
+    return fns[method](trainer, network, fl, **kw)
+
+
+def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
+                verbose: bool = False, eval_every: int = 1) -> RunHistory:
+    """FedProx [Li et al. 2020]: FedAvg + proximal term pulling local
+    models toward the global model (extra baseline beyond the paper).
+
+    Implemented generically: after local training, each update is blended
+    toward the global params by 1/(1+prox_mu_eff) — the closed form of
+    the proximal step for quadratic regularization applied post-hoc,
+    which keeps the trainer interface unchanged.
+    """
+    import jax
+    rng = np.random.default_rng(fl.seed + 17)
+    hist = RunHistory(method="fedprox", arch=trainer.cfg.arch_id,
+                      meta={"mu": fl.mu, "prox_mu": prox_mu})
+    params = trainer.init_params(fl.seed)
+    clock = 0.0
+    blend = 1.0 / (1.0 + prox_mu * 10)
+    for rnd in range(1, fl.rounds + 1):
+        sel = rng.choice(fl.n_clients, size=min(fl.tau, fl.n_clients),
+                         replace=False)
+        updates, sizes, times = [], [], []
+        for c in sel:
+            st = network.delay(int(c), rnd)
+            times.append(st)
+            new_p, s_c = trainer.local_train(params, int(c), rnd_seed=rnd)
+            prox_p = jax.tree_util.tree_map(
+                lambda n, g: (blend * n.astype(jnp.float32)
+                              + (1 - blend) * g.astype(jnp.float32)
+                              ).astype(n.dtype), new_p, params)
+            updates.append(prox_p)
+            sizes.append(s_c)
+        params = weighted_average(updates, sizes)
+        clock += max(times)
+        if rnd % eval_every == 0:
+            acc = trainer.evaluate(params)
+            hist.record(time=clock, rnd=rnd, acc=acc, n_selected=len(sel))
+            if verbose:
+                print(f"[fedprox] r={rnd:4d} t={clock:9.1f}s acc={acc:.4f}")
+            if fl.target_accuracy and acc >= fl.target_accuracy:
+                break
+    return hist

@@ -1,0 +1,117 @@
+"""FedDCT training loop (paper Alg. 2) over a virtual clock.
+
+Round flow:
+  1. Tier the currently-available clients on their running-average
+     times (Alg. 3 — dynamic: re-split every round).
+  2. CSTT (Alg. 4): move the tier pointer by the accuracy delta (Eq. 3),
+     select tau low-participation clients from every tier 1..t (Eq. 4 as
+     stated in the text), compute per-tier timeouts (Eq. 7).
+  3. Clients train for real (JAX); their virtual cost comes from the
+     wireless model.  A client whose time st >= D_max of its tier is a
+     straggler: its update is dropped and it enters the parallel
+     re-evaluation lane for kappa rounds (Alg. 2 "Async:" line).
+  4. Aggregate survivors weighted by sample count; clock advances by
+     Eq. 5/6: D = max over used tiers of min(max(st in tier), D_max^t, Ω).
+  5. Clients whose evaluation lane finished (virtual time passed) rejoin
+     with their refreshed average time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config.base import FLConfig
+from repro.core.aggregation import weighted_average
+from repro.core.selection import cstt
+from repro.core.tiering import evaluate_client, tiering, update_avg_time
+from repro.fl.metrics import RunHistory
+
+
+def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
+               verbose: bool = False, eval_every: int = 1) -> RunHistory:
+    rng = np.random.default_rng(fl.seed + 7)
+    hist = RunHistory(method="feddct", arch=trainer.cfg.arch_id,
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                            "beta": fl.beta, "kappa": fl.kappa,
+                            "omega": fl.omega, "tau": fl.tau,
+                            "n_tiers": fl.n_tiers})
+    params = trainer.init_params(fl.seed)
+    clock = 0.0
+
+    # ---- initial kappa-round evaluation of every client (parallel) ----
+    at: Dict[int, float] = {}
+    ct: Dict[int, int] = {}
+    setup_times = []
+    for c in range(fl.n_clients):
+        t_avg, spent = evaluate_client(network, c, rnd=0, kappa=fl.kappa,
+                                       omega=fl.omega)
+        at[c] = t_avg
+        ct[c] = 0
+        setup_times.append(spent)
+    clock += max(setup_times)               # all clients evaluate in parallel
+
+    # straggler re-evaluation lane: client -> (rejoin_time, new_at)
+    eval_lane: Dict[int, tuple] = {}
+    t_ptr = 1
+    # Alg. 4 compares v_r (accuracy of the current global model) with
+    # v_{r-1}.  We evaluate once per round, after aggregation; that value
+    # is v_r for the next round's tier move.
+    v_curr = 0.0        # v_{r-1}: accuracy of the model entering this round
+    v_prev = 0.0        # v_{r-2}
+    m = max(fl.n_clients // fl.n_tiers, 1)
+
+    for rnd in range(1, fl.rounds + 1):
+        # ---- rejoin clients whose re-evaluation completed --------------
+        for c in [c for c, (tr, _) in eval_lane.items() if tr <= clock]:
+            at[c] = eval_lane.pop(c)[1]
+
+        avail_at = {c: v for c, v in at.items() if c not in eval_lane}
+        tiers = tiering(avail_at, m)
+        if not tiers:
+            break
+
+        selected, d_max, t_ptr = cstt(
+            t_ptr, v_prev, v_curr, tiers, avail_at, ct, fl.tau, fl.beta,
+            fl.omega, rng)
+
+        updates, sizes, times_per_tier = [], [], {}
+        n_straggle = 0
+        for c, k in selected:
+            st = network.delay(c, rnd)
+            times_per_tier.setdefault(k, []).append(min(st, d_max[k]))
+            if st >= d_max[k]:
+                # straggler: drop update, enter evaluation lane
+                n_straggle += 1
+                new_at, spent = evaluate_client(network, c, rnd, fl.kappa,
+                                                fl.omega)
+                eval_lane[c] = (clock + spent, new_at)
+                continue
+            new_p, s_c = trainer.local_train(params, c, rnd_seed=rnd)
+            updates.append(new_p)
+            sizes.append(s_c)
+            at[c] = update_avg_time(at[c], ct[c], st)
+            ct[c] += 1
+
+        if updates:
+            params = weighted_average(updates, sizes,
+                                      use_kernel=use_kernel_agg)
+
+        # Eq. 5/6 round duration
+        d_round = 0.0
+        for k, ts_k in times_per_tier.items():
+            d_round = max(d_round, min(max(ts_k), d_max[k], fl.omega))
+        clock += d_round
+
+        if rnd % eval_every == 0:
+            v_now = trainer.evaluate(params)
+            hist.record(time=clock, rnd=rnd, acc=v_now, tier=t_ptr,
+                        n_selected=len(selected), n_stragglers=n_straggle)
+            v_prev, v_curr = v_curr, v_now
+            if verbose:
+                print(f"[feddct] r={rnd:4d} t={clock:9.1f}s tier={t_ptr} "
+                      f"acc={v_now:.4f} sel={len(selected)} str={n_straggle}")
+            if fl.target_accuracy and v_now >= fl.target_accuracy:
+                break
+    return hist

@@ -1,0 +1,69 @@
+"""Pairwise-mask secure aggregation (Bonawitz et al. style, simplified).
+
+The paper argues synchronous schemes like FedDCT stay compatible with
+existing FL privacy protection while asynchronous FL does not (§1, §2).
+This module makes that concrete: each pair of surviving clients (i, j)
+derives a shared PRG mask m_ij from their pair seed; client i uploads
+w_i + sum_{j>i} m_ij - sum_{j<i} m_ji.  Masks cancel exactly in the
+weighted sum, so the server learns ONLY the aggregate — and the whole
+thing drops into FedDCT's round unchanged, because the survivor set is
+fixed when the round's timeout fires (something FedAsync cannot offer:
+there is no survivor set, so masks never cancel).
+
+Dropout handling uses the simple "unmask survivors" variant: masks are
+generated only over the survivor set announced by the server after the
+per-tier timeouts — exactly the set FedDCT's Eq. 5/6 freezes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pair_seed(base_seed: int, rnd: int, i: int, j: int) -> int:
+    a, b = (i, j) if i < j else (j, i)
+    return (base_seed * 1_000_003 + rnd * 8_191 + a * 131_071 + b) % (2 ** 31)
+
+
+def _mask_like(params, seed: int, scale: float = 1.0):
+    """Deterministic PRG mask with the same pytree structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(leaves))
+    masks = [jax.random.normal(k, l.shape, jnp.float32) * scale
+             for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def mask_update(params, client: int, survivors: Sequence[int], rnd: int,
+                weight: float, base_seed: int = 0, scale: float = 1.0):
+    """Client-side: w_i*s_i + sum of signed pairwise masks.
+
+    Uploads are PRE-weighted (w_i * s_i) so the server's plain sum over
+    masked uploads equals sum(s_i * w_i); the server divides by sum(s).
+    """
+    out = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32) * weight, params)
+    for other in survivors:
+        if other == client:
+            continue
+        m = _mask_like(params, _pair_seed(base_seed, rnd, client, other),
+                       scale)
+        sign = 1.0 if client < other else -1.0
+        out = jax.tree_util.tree_map(lambda a, b: a + sign * b, out, m)
+    return out
+
+
+def secure_aggregate(masked_updates: Sequence, sizes: Sequence[float]):
+    """Server-side: plain sum of masked uploads / sum of sizes.
+
+    The server never sees an unmasked individual update.
+    """
+    total = jax.tree_util.tree_map(lambda *xs: sum(xs), *masked_updates)
+    denom = float(np.sum(sizes))
+    return jax.tree_util.tree_map(
+        lambda t: (t / max(denom, 1e-30)), total)

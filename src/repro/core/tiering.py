@@ -1,0 +1,45 @@
+"""Dynamic tiering (paper Alg. 3 + Eqs. 1-2).
+
+``tiering`` re-runs every round on the *current* running-average training
+times — this is what makes FedDCT's tiers dynamic, vs TiFL's frozen
+profiling-time tiers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def tiering(at: Dict[int, float], m: int) -> List[List[int]]:
+    """Alg. 3: sort clients by average time ascending, split into tiers of
+    width ``m`` (tier 1 fastest).  Returns list of tiers (client-id lists).
+
+    ``at`` holds only *currently tierable* clients (stragglers under
+    re-evaluation are absent, exactly like Alg. 2's flow).
+    """
+    if not at:
+        return []
+    order = sorted(at, key=lambda c: (at[c], c))
+    m = max(int(m), 1)
+    return [order[i:i + m] for i in range(0, len(order), m)]
+
+
+def update_avg_time(at: float, ct: int, t_train: float) -> float:
+    """Eq. 2: running average over successful rounds."""
+    return (at * ct + t_train) / (ct + 1)
+
+
+def evaluate_client(network, client: int, rnd: int, kappa: int,
+                    omega: float) -> tuple[float, float]:
+    """Profile a client with kappa evaluation rounds (Alg. 2 init and the
+    straggler re-evaluation lane).  Attempts are capped at omega each (a
+    dead client costs at most kappa*omega and simply re-enters the lane).
+
+    Returns (new_average_time, wall_time_spent).
+    """
+    times = [network.delay(client, rnd, attempt=a + 1)
+             for a in range(max(kappa, 1))]
+    capped = [min(t, omega) for t in times]
+    return float(np.mean(times)), float(np.sum(capped))

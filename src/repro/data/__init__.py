@@ -1,0 +1,13 @@
+from repro.data.synthetic import make_image_dataset, make_token_dataset
+from repro.data.partition import (
+    primary_class_partition,
+    dirichlet_partition,
+    iid_partition,
+)
+from repro.data.pipeline import ClientDataset, client_batches
+
+__all__ = [
+    "make_image_dataset", "make_token_dataset",
+    "primary_class_partition", "dirichlet_partition", "iid_partition",
+    "ClientDataset", "client_batches",
+]

@@ -1,0 +1,156 @@
+"""FL client trainers.
+
+A *Trainer* binds a model family to the FL loop:
+    init_params(seed)                          -> params
+    local_train(params, client_id, rnd_seed)   -> (new_params, n_samples)
+    evaluate(params)                           -> accuracy in [0,1]
+
+``CNNTrainer`` reproduces the paper's workloads (CNN / ResNet8, real SGD
+on real batches).  ``LMTrainer`` makes any assigned LLM architecture an
+FL workload (reduced config on CPU; full config under pjit on a mesh) —
+its "accuracy" is next-token top-1 on a held-out batch, which drives
+Eq. 3 tier movement exactly like test accuracy does for CNNs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import FLConfig, ModelConfig
+from repro.data.pipeline import ClientDataset, client_batches
+from repro.data.partition import primary_class_partition
+from repro.data.synthetic import make_image_dataset, make_token_dataset
+from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
+from repro.models.transformer import forward as lm_forward
+from repro.models.transformer import init_model, lm_loss
+from repro.optim import make_optimizer
+
+
+class CNNTrainer:
+    def __init__(self, cfg: ModelConfig, fl: FLConfig, dataset: str,
+                 scale: float = 0.05):
+        self.cfg = cfg
+        self.fl = fl
+        data = make_image_dataset(dataset, seed=fl.seed, scale=scale)
+        parts = primary_class_partition(
+            data["y_train"], fl.n_clients, fl.primary_frac, seed=fl.seed)
+        self.clients: List[ClientDataset] = [
+            ClientDataset(data["x_train"][p], data["y_train"][p])
+            for p in parts]
+        self.x_test = jnp.asarray(data["x_test"])
+        self.y_test = jnp.asarray(data["y_test"])
+        self.opt = make_optimizer(fl.optimizer)
+        self._step = jax.jit(self._step_impl)
+        self._eval = jax.jit(self._eval_impl)
+
+    def _step_impl(self, params, opt_state, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: cnn_loss(self.cfg, p, {"x": x, "y": y}))(params)
+        ups, opt_state = self.opt.update(grads, opt_state, params, self.fl.lr)
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, ups)
+        return params, opt_state, loss
+
+    def _eval_impl(self, params, x, y):
+        logits = cnn_forward(self.cfg, params, x)
+        return jnp.mean(jnp.argmax(logits, -1) == y)
+
+    def init_params(self, seed: int = 0):
+        return init_cnn(self.cfg, jax.random.PRNGKey(seed))
+
+    def local_train(self, params, client_id: int, rnd_seed: int):
+        ds = self.clients[client_id]
+        opt_state = self.opt.init(params)
+        for ep in range(self.fl.local_epochs):
+            for x, y in client_batches(ds, self.fl.batch_size,
+                                       rnd_seed * 131 + ep):
+                params, opt_state, _ = self._step(
+                    params, opt_state, jnp.asarray(x), jnp.asarray(y))
+        return params, len(ds)
+
+    def evaluate(self, params, max_samples: int = 2048) -> float:
+        n = min(max_samples, self.x_test.shape[0])
+        accs = []
+        for i in range(0, n, 512):
+            accs.append(float(self._eval(params, self.x_test[i:i + 512],
+                                         self.y_test[i:i + 512])))
+        return float(np.mean(accs))
+
+
+class LMTrainer:
+    """FL over a (reduced or pjit-sharded) LM architecture."""
+
+    def __init__(self, cfg: ModelConfig, fl: FLConfig, seq_len: int = 128,
+                 batch: int = 8, corpus_tokens: int = 200_000,
+                 step_fn=None, init_fn=None):
+        self.cfg = cfg
+        self.fl = fl
+        self.seq = seq_len
+        self.batch = batch
+        toks = make_token_dataset(cfg.vocab_size, corpus_tokens, seed=fl.seed)
+        splits = np.array_split(toks[:-corpus_tokens // 10], fl.n_clients)
+        self.client_toks = splits
+        self.test_toks = toks[-corpus_tokens // 10:]
+        self.opt = make_optimizer(fl.optimizer)
+        self._step = step_fn or jax.jit(self._step_impl)
+        self._init_fn = init_fn
+        self._eval = jax.jit(self._eval_impl)
+
+    def _step_impl(self, params, opt_state, tokens):
+        def loss_fn(p):
+            l, _ = lm_loss(self.cfg, p, {"tokens": tokens})
+            return l
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        ups, opt_state = self.opt.update(grads, opt_state, params, self.fl.lr)
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)
+                          ).astype(p.dtype), params, ups)
+        return params, opt_state, loss
+
+    def _eval_impl(self, params, tokens):
+        logits, _ = lm_forward(self.cfg, params, {"tokens": tokens})
+        pred = jnp.argmax(logits[:, :-1], -1)
+        return jnp.mean(pred == tokens[:, 1:])
+
+    def _batch(self, toks: np.ndarray, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        n = max(len(toks) - self.seq - 1, 1)
+        starts = rng.integers(0, n, self.batch)
+        return np.stack([toks[s:s + self.seq] for s in starts])
+
+    def init_params(self, seed: int = 0):
+        if self._init_fn is not None:
+            return self._init_fn(seed)
+        return init_model(self.cfg, jax.random.PRNGKey(seed))
+
+    def local_train(self, params, client_id: int, rnd_seed: int):
+        toks = self.client_toks[client_id]
+        opt_state = self.opt.init(params)
+        for ep in range(self.fl.local_epochs):
+            b = jnp.asarray(self._batch(toks, rnd_seed * 131 + ep))
+            params, opt_state, _ = self._step(params, opt_state, b)
+        return params, len(toks)
+
+    def evaluate(self, params) -> float:
+        b = jnp.asarray(self._batch(self.test_toks, 1234))
+        return float(self._eval(params, b))
+
+
+def build_fl_clients(arch_id: str, fl: FLConfig, dataset: Optional[str] = None,
+                     scale: float = 0.05, reduced: bool = True):
+    """Factory: any registered arch becomes an FL workload."""
+    from repro.config import get_arch
+    cfg = get_arch(arch_id)
+    if cfg.family == "cnn":
+        ds = dataset or {"cnn-mnist": "mnist", "cnn-fmnist": "fmnist",
+                         "resnet8-cifar10": "cifar10"}[arch_id]
+        return CNNTrainer(cfg, fl, ds, scale=scale)
+    if reduced:
+        cfg = cfg.reduced()
+    return LMTrainer(cfg, fl)

@@ -1,0 +1,57 @@
+"""Run history: accuracy / time / tier traces, JSON round-trip."""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RunHistory:
+    method: str
+    arch: str
+    times: List[float] = field(default_factory=list)       # virtual seconds
+    rounds: List[int] = field(default_factory=list)
+    accuracy: List[float] = field(default_factory=list)
+    tier: List[int] = field(default_factory=list)
+    n_selected: List[int] = field(default_factory=list)
+    n_stragglers: List[int] = field(default_factory=list)
+    meta: Dict = field(default_factory=dict)
+
+    def record(self, *, time: float, rnd: int, acc: float, tier: int = 0,
+               n_selected: int = 0, n_stragglers: int = 0):
+        self.times.append(float(time))
+        self.rounds.append(int(rnd))
+        self.accuracy.append(float(acc))
+        self.tier.append(int(tier))
+        self.n_selected.append(int(n_selected))
+        self.n_stragglers.append(int(n_stragglers))
+
+    def best_accuracy(self, smooth: int = 5) -> float:
+        if not self.accuracy:
+            return 0.0
+        import numpy as np
+        a = np.asarray(self.accuracy)
+        if len(a) < smooth:
+            return float(a.max())
+        k = np.convolve(a, np.ones(smooth) / smooth, mode="valid")
+        return float(k.max())
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        for t, a in zip(self.times, self.accuracy):
+            if a >= target:
+                return t
+        return None
+
+    def save(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.__dict__, f)
+
+    @classmethod
+    def load(cls, path: str) -> "RunHistory":
+        with open(path) as f:
+            d = json.load(f)
+        return cls(**d)

@@ -1,0 +1,48 @@
+"""Wireless-network delay model (paper §5.1).
+
+Clients are split into M resource groups; client c in group g has a
+per-round training delay ~ N(mean_g, std).  With probability mu the round
+suffers a transmission/compute failure adding U(30, 60) seconds.  All
+draws are deterministic functions of (seed, client, round, attempt) so
+every FL method sees the *identical* network realization — the paper's
+comparisons assume this.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+class WirelessNetwork:
+    def __init__(self, n_clients: int, tier_delay_means: Sequence[float],
+                 delay_std: float = 2.0, mu: float = 0.0,
+                 failure_delay: Tuple[float, float] = (30.0, 60.0),
+                 seed: int = 0):
+        self.n_clients = n_clients
+        self.mu = float(mu)
+        self.failure_delay = failure_delay
+        self.delay_std = float(delay_std)
+        self.seed = int(seed)
+        g = len(tier_delay_means)
+        # paper: "divide all clients into M parts" — contiguous groups
+        self.group = np.repeat(np.arange(g), -(-n_clients // g))[:n_clients]
+        self.means = np.asarray(tier_delay_means, np.float64)[self.group]
+
+    def _rng(self, client: int, rnd: int, attempt: int = 0):
+        return np.random.default_rng(
+            (self.seed * 1_000_003 + client * 9_176 + rnd * 131 + attempt)
+            % (2 ** 63))
+
+    def delay(self, client: int, rnd: int, attempt: int = 0) -> float:
+        """Sampled wall-clock cost of one local round for ``client``."""
+        rng = self._rng(client, rnd, attempt)
+        base = max(0.1, rng.normal(self.means[client], self.delay_std))
+        if rng.random() < self.mu:
+            lo, hi = self.failure_delay
+            base += rng.uniform(lo, hi)
+        return float(base)
+
+    def expected_mean(self, client: int) -> float:
+        return float(self.means[client])

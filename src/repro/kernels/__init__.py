@@ -1,0 +1,8 @@
+from repro.kernels.ops import (
+    gqa_flash_attention,
+    ssm_scan_op,
+    fedagg_op,
+    fedagg_pytree,
+)
+
+__all__ = ["gqa_flash_attention", "ssm_scan_op", "fedagg_op", "fedagg_pytree"]

@@ -1,0 +1,50 @@
+"""Weighted federated aggregation Pallas TPU kernel.
+
+The FedDCT server's hot loop: w_global = sum_c (s_c / sum s) * w_c over
+the stacked client updates (N_clients, P).  One pass over HBM, f32
+accumulation in VMEM, parameter axis tiled so each (N, bp) panel fits
+VMEM regardless of model size.  Weight normalization is fused.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, w_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # (N, bp)
+    w = w_ref[...].astype(jnp.float32)          # (N,)
+    w = w / jnp.maximum(w.sum(), 1e-30)
+    o_ref[...] = (w @ u).astype(o_ref.dtype)    # (bp,)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def fedagg(updates, weights, *, block_p: int = 16384,
+           interpret: bool = False):
+    """updates (N,P), weights (N,) -> weighted average (P,)."""
+    n, p = updates.shape
+    bp = min(block_p, p)
+    pad = (-p) % bp
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    np_ = updates.shape[1]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), updates.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(updates, weights)
+    return out[:p] if pad else out

@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``;
+on TPU they compile natively.  ``gqa_flash_attention`` adapts the model
+zoo's (B,S,H,D)/(B,T,Hkv,D) layout to the kernel's folded-head layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedagg import fedagg
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def gqa_flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                        block_q=128, block_k=128, interpret=None):
+    """q (B,S,H,D); k/v (B,T,Hkv,D) -> (B,S,H,D)."""
+    interpret = on_cpu() if interpret is None else interpret
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    kx = jnp.repeat(k, rep, axis=2)
+    vx = jnp.repeat(v, rep, axis=2)
+    fold = lambda t: jnp.moveaxis(t, 2, 1).reshape(b * h, t.shape[1], d)
+    o = flash_attention(fold(q), fold(kx), fold(vx), causal=causal,
+                        window=window, q_offset=q_offset, block_q=block_q,
+                        block_k=block_k, interpret=interpret)
+    return jnp.moveaxis(o.reshape(b, h, s, d), 1, 2)
+
+
+def ssm_scan_op(x, dt, b_in, c_out, a_log, *, chunk=128, block_d=256,
+                interpret=None):
+    interpret = on_cpu() if interpret is None else interpret
+    return ssm_scan(x, dt, b_in, c_out, a_log, chunk=chunk, block_d=block_d,
+                    interpret=interpret)
+
+
+def fedagg_op(updates, weights, *, block_p=16384, interpret=None):
+    interpret = on_cpu() if interpret is None else interpret
+    return fedagg(updates, weights, block_p=block_p, interpret=interpret)
+
+
+def fedagg_pytree(stacked_updates, weights, *, interpret=None):
+    """Weighted-average a pytree whose leaves are stacked (N, ...)."""
+    def agg(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return fedagg_op(flat, weights, interpret=interpret).reshape(
+            leaf.shape[1:])
+    return jax.tree_util.tree_map(agg, stacked_updates)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q (BH,S,D), k/v (BH,T,D) — heads pre-folded into batch."""
+    d = q.shape[-1]
+    s_ = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(q.shape[1]) + q_offset
+    kp = jnp.arange(k.shape[1])
+    m = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        m &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        m &= kp[None, :] > qp[:, None] - window
+    s_ = jnp.where(m[None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, b_in, c_out, a_log):
+    """Sequential oracle for the diagonal selective scan.
+
+    x, dt (B,S,D); b_in, c_out (B,S,N); a_log (D,N).  Returns y (B,S,D).
+    """
+    a_neg = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[:, :, None] * a_neg[None])          # (B,D,N)
+        dbx = (dtt * xt)[:, :, None] * bt[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    bsz, s, d = x.shape
+    n = b_in.shape[-1]
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b_in.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c_out.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def fedagg_ref(updates, weights):
+    """updates (N,P), weights (N,) -> (P,) weighted average (f32 accum)."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-30)
+    return jnp.einsum("np,n->p", updates.astype(jnp.float32),
+                      w).astype(updates.dtype)

@@ -1,0 +1,57 @@
+"""FedDCT over any assigned architecture — the paper's scheduler driving
+LM clients (the datacenter embodiment from DESIGN.md §2).
+
+    PYTHONPATH=src python -m repro.launch.fl_train --arch llama3.2-1b \
+        --method feddct --rounds 20 --clients 10 --mu 0.2
+
+Each FL client's local step is the same train_step the dry-run lowers;
+on CPU the reduced config is used so rounds are fast.  The wireless
+delay/failure model supplies virtual time exactly as for the CNN runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.config.base import FLConfig
+from repro.core import run_method
+from repro.fl.client import build_fl_clients
+from repro.fl.network import WirelessNetwork
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--method", default="feddct",
+                    choices=["feddct", "fedavg", "tifl", "fedasync"])
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--tiers", type=int, default=5)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--mu", type=float, default=0.0)
+    ap.add_argument("--primary-frac", type=float, default=0.7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    fl = FLConfig(n_clients=args.clients, n_tiers=args.tiers, tau=args.tau,
+                  rounds=args.rounds, mu=args.mu,
+                  primary_frac=args.primary_frac, seed=args.seed,
+                  lr=1e-3)
+    net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                          fl.mu, fl.failure_delay, fl.seed)
+    trainer = build_fl_clients(args.arch, fl)
+    hist = run_method(args.method, trainer, net, fl, verbose=True)
+    print(f"[fl_train] {args.method} on {args.arch}: "
+          f"final acc={hist.accuracy[-1]:.4f} "
+          f"virtual time={hist.times[-1]:.1f}s")
+    if args.out:
+        hist.save(args.out)
+        print(f"[fl_train] history -> {args.out}")
+    return hist
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh factories.
+
+Functions, not module-level constants: importing this module never
+touches jax device state.  The single-pod production mesh is 16x16 = 256
+chips ("data", "model"); multi-pod is 2x16x16 = 512 chips with a leading
+"pod" axis (pure data parallelism across pods — gradient all-reduce is
+the only cross-pod collective).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(min(model, n // max(data, 1)), 1)
+    return jax.make_mesh((data, model), ("data", "model"))

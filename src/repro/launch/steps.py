@@ -1,0 +1,205 @@
+"""jit-able train / prefill / serve steps + abstract input specs.
+
+Everything here works on ShapeDtypeStructs (dry-run, zero allocation) and
+on real arrays (smoke tests / actual training).  ``input_specs`` returns
+the exact stand-ins for every assigned input shape; decode shapes include
+the per-layer KV/SSM cache state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import InputShape, ModelConfig, TrainConfig
+from repro.models.transformer import (decode_step, forward,
+                                      init_decode_state, init_model, lm_loss)
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.optim.optimizer import apply_updates
+
+# window used when a full-attention dense arch runs long_500k as its
+# sliding-window variant (DESIGN.md §6)
+SWA_OVERRIDE_WINDOW = 8192
+
+
+def _dtype(tcfg: TrainConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[tcfg.dtype]
+
+
+def swa_window_for(cfg: ModelConfig, shape: InputShape,
+                   enabled: bool = True) -> int:
+    """-1 = arch default; explicit SWA window for long_500k on every arch
+    whose native attention is quadratic / unbounded-cache (dense, vlm,
+    and full-attention MoE like arctic).  ``enabled=False`` reproduces the
+    pre-hillclimb baseline (dense/vlm only)."""
+    if shape.name != "long_500k" or cfg.subquadratic or cfg.family == "ssm":
+        return -1
+    if enabled or cfg.family in ("dense", "vlm"):
+        return SWA_OVERRIDE_WINDOW
+    return -1
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                tcfg: TrainConfig = TrainConfig()) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step's data inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = _dtype(tcfg)
+    if shape.kind == "decode":
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.arch_id}: encoder-only, no decode step")
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.family == "audio":
+        spec = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return spec
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    dt = _dtype(tcfg)
+    return jax.eval_shape(
+        lambda: init_model(cfg, jax.random.PRNGKey(0), dtype=dt))
+
+
+def abstract_opt_state(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    opt = make_optimizer(tcfg.optimizer, weight_decay=tcfg.weight_decay)
+    params = abstract_params(cfg, tcfg)
+    return jax.eval_shape(opt.init, params)
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: InputShape,
+                          tcfg: TrainConfig = TrainConfig()):
+    w = swa_window_for(cfg, shape, enabled=tcfg.long_ctx_swa)
+    return jax.eval_shape(
+        functools.partial(init_decode_state, cfg, shape.global_batch,
+                          shape.seq_len, dtype=_dtype(tcfg), window=w))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig(),
+                    lr: Optional[float] = None):
+    opt = make_optimizer(tcfg.optimizer, weight_decay=tcfg.weight_decay)
+    lr = tcfg.lr if lr is None else lr
+    moe_group = tcfg.moe_group_tokens
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, aux = lm_loss(cfg, p, batch, chunk_q=tcfg.attn_chunk_q,
+                                chunk_kv=tcfg.attn_chunk_kv,
+                                moe_group=moe_group, remat=tcfg.remat,
+                                context_parallel=tcfg.context_parallel,
+                                seq_parallel=tcfg.seq_parallel,
+                                remat_policy=tcfg.remat_policy)
+            return loss, aux
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if tcfg.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        ups, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, ups)
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """Forward over the full prompt; returns last-position logits only
+    (the (B,S,V) tensor is never formed — hidden is chunk-projected)."""
+
+    def prefill_step(params, batch):
+        hidden, _ = forward(cfg, params, batch, chunk_q=tcfg.attn_chunk_q,
+                            chunk_kv=tcfg.attn_chunk_kv,
+                            moe_group=tcfg.moe_group_tokens,
+                            return_hidden=True,
+                            context_parallel=tcfg.context_parallel,
+                            seq_parallel=tcfg.seq_parallel)
+        last = hidden[:, -1]
+        head = params.get("head", None)
+        if head is None:
+            head = params["embed"].T
+        return last @ head
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shape: InputShape,
+                    tcfg: TrainConfig = TrainConfig()):
+    """One decode step: next-token logits + updated cache state."""
+    w = swa_window_for(cfg, shape, enabled=tcfg.long_ctx_swa)
+
+    def serve_step(params, state, batch):
+        logits, state = decode_step(cfg, params, state, batch["tokens"],
+                                    window=w)
+        return logits, state
+
+    return serve_step
+
+
+def make_serve_loop(cfg: ModelConfig, shape: InputShape,
+                    tcfg: TrainConfig = TrainConfig(), n_steps: int = 16):
+    """N greedy decode steps under one jit (lax.scan).
+
+    This is the honest accounting unit for weight-stationary serving:
+    per-token costs that a single-step dry-run charges every token (FSDP
+    weight gathers) amortize only if XLA hoists them out of the scan —
+    lowering this tells us whether it does (§Perf arctic v4)."""
+    w = swa_window_for(cfg, shape, enabled=tcfg.long_ctx_swa)
+
+    def serve_loop(params, state, batch):
+        def body(carry, _):
+            st, tok = carry
+            logits, st = decode_step(cfg, params, st, tok, window=w)
+            nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            return (st, nxt), logits[:, -1]
+        (state, _), all_logits = jax.lax.scan(
+            body, (state, batch["tokens"]), None, length=n_steps)
+        return all_logits, state
+
+    return serve_loop
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (roofline "useful compute" reference)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D for training (3x fwd matmul flops), 2*N_active*D for
+    inference; attention O(S^2) term added for quadratic-attention archs."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.tokens
+        base = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        base = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        base = 2.0 * n_active * tokens
+    # attention score/value flops
+    if cfg.family not in ("ssm",) and cfg.n_heads:
+        s = shape.seq_len
+        w = cfg.sliding_window or (SWA_OVERRIDE_WINDOW
+                                   if shape.name == "long_500k" else 0)
+        ctx = min(s, w) if w else s
+        if shape.kind == "decode":
+            att = 4.0 * shape.global_batch * ctx * cfg.q_dim
+        else:
+            per_tok = ctx if w else s / 2  # causal half
+            att = 4.0 * shape.tokens * per_tok * cfg.q_dim
+            if shape.kind == "train":
+                att *= 3.0
+        base += att * cfg.num_layers
+    return base

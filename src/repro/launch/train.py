@@ -1,0 +1,106 @@
+"""Centralized (non-FL) training driver for any registered arch.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 100 --batch 8 --seq 128
+
+Runs real optimization on CPU with the reduced config by default; with
+--mesh data,model it runs pjit-sharded on however many devices exist.
+This is the substrate the FL layer drives; it is also example (b)'s
+"train a ~100M model for a few hundred steps" entry point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.config import get_arch
+from repro.config.base import TrainConfig
+from repro.data.synthetic import make_token_dataset
+from repro.launch.steps import make_train_step
+from repro.optim import make_optimizer
+from repro.sharding import batch_specs, named_shardings, param_specs
+from repro.sharding.hints import set_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '1,1' => (data,model) over local devices")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "cnn":
+        raise SystemExit("use examples/feddct_mnist.py for CNN workloads")
+    tcfg = TrainConfig(dtype="float32", lr=args.lr, remat=False,
+                       attn_chunk_q=min(128, args.seq),
+                       attn_chunk_kv=min(128, args.seq))
+
+    from repro.models import init_model
+    params = init_model(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    step_fn, opt = make_train_step(cfg, tcfg)
+    opt_state = opt.init(params)
+
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split(","))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        set_mesh(mesh)
+        p_sh = named_shardings(param_specs(params, mesh), mesh)
+        step = jax.jit(step_fn, in_shardings=(p_sh, None, None),
+                       out_shardings=(p_sh, None, None))
+        ctx = mesh
+    else:
+        step = jax.jit(step_fn)
+        ctx = None
+
+    toks = make_token_dataset(cfg.vocab_size, 400_000, seed=0)
+    rng = np.random.default_rng(0)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.arch_id}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch={args.batch} seq={args.seq}")
+
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        starts = rng.integers(0, len(toks) - args.seq - 1, args.batch)
+        batch = {"tokens": jnp.asarray(
+            np.stack([toks[s:s + args.seq] for s in starts]))}
+        if ctx is not None:
+            with ctx:
+                params, opt_state, metrics = step(params, opt_state, batch)
+        else:
+            params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / (i + 1)
+            print(f"[train] step {i+1:5d} loss={losses[-1]:.4f} "
+                  f"({dt*1e3:.0f} ms/step)")
+    set_mesh(None)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, args.steps,
+                        {"params": params, "opt": opt_state})
+        print(f"[train] checkpoint saved to {args.ckpt}")
+    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.models.transformer import (
+    init_model,
+    forward,
+    decode_step,
+    init_decode_state,
+    lm_loss,
+)
+from repro.models.cnn import init_cnn, cnn_forward, cnn_loss
+
+__all__ = [
+    "init_model", "forward", "decode_step", "init_decode_state", "lm_loss",
+    "init_cnn", "cnn_forward", "cnn_loss",
+]

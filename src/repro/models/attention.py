@@ -1,0 +1,385 @@
+"""GQA attention: naive, flash-style chunked, banded sliding-window, decode.
+
+Layout: q (B,S,H,D); k/v enter as (B,T,Hkv,D) and are repeated to full H
+before the score computation ("full-head" layout).  This keeps the head
+axis a single shardable dimension — under the production mesh the head
+axis carries the "model" axis (megatron-style tensor parallelism) and
+each shard sees only its q heads plus the matching repeated KV slices.
+Sharding hints are divisibility-checked no-ops without a mesh.
+
+Three execution paths:
+  * ``naive_attention``   — O(S*T) materialized scores; smoke tests / oracle.
+  * ``chunked_attention`` — flash-style online softmax, outer scan over Q
+    chunks, inner scan over KV chunks; bounded memory; the lowering path
+    for big shapes.  Causal masking is per block; fully-masked blocks are
+    still computed (see EXPERIMENTS.md §Perf for the block-skip variant).
+  * ``banded_attention``  — true O(S*W) sliding window: each Q chunk
+    dynamic-slices only the KV chunks inside its band.
+The Pallas TPU kernel (kernels/flash_attention.py) implements the same
+online-softmax algorithm with explicit VMEM BlockSpecs.
+
+All softmax math is float32; inputs/outputs keep their dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.hints import axis_size, hint
+
+NEG_INF = -1e30
+
+# perf-iteration toggle (EXPERIMENTS.md §Perf): head_dim-sharded decode
+# attention for archs whose head count doesn't divide the model axis.
+DECODE_HEADDIM_SHARD = True
+
+
+def repeat_kv(k, n_heads: int):
+    """(B,T,Hkv,D) -> (B,T,H,D) by repeating each kv head H/Hkv times."""
+    rep = n_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(Sq,Tk) additive bias from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def _softcap(s, softcap: float):
+    return jnp.tanh(s / softcap) * softcap if softcap > 0 else s
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    softcap: float = 0.0):
+    """q (B,S,H,D); k/v (B,T,H,D) already head-expanded."""
+    b, s, h, d = q.shape
+    s_ = jnp.einsum("bqhd,bthd->bhqt", q, k,
+                    preferred_element_type=jnp.float32) / math.sqrt(d)
+    s_ = _softcap(s_, softcap)
+    q_pos = jnp.arange(s) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    s_ = s_ + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _flash_inner(qb, k, v, q_pos, causal, window, chunk_kv, scale, softcap):
+    """Online softmax over KV chunks for one Q chunk.
+
+    qb: (B,Sq,H,D) f32; k/v (B,T,H,D).  Returns (B,Sq,H,D) f32.
+    """
+    b, sq, h, d = qb.shape
+    t = k.shape[1]
+    n_blocks = t // chunk_kv
+
+    def body(carry, blk):
+        acc, m_run, l_run = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, blk * chunk_kv, chunk_kv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, blk * chunk_kv, chunk_kv, 1)
+        s_ = jnp.einsum("bqhd,bthd->bhqt", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+        s_ = _softcap(s_, softcap)
+        k_pos = blk * chunk_kv + jnp.arange(chunk_kv)
+        s_ = s_ + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+        s_ = hint(s_, "batch", "model", None, None)
+        m_new = jnp.maximum(m_run, s_.max(axis=-1))
+        p = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqt,bthd->bhqd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        body, (acc0, m0, l0), jnp.arange(n_blocks))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2)                     # (B,Sq,H,D)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      chunk_q=512, chunk_kv=1024, softcap: float = 0.0):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk_q = min(chunk_q, s)
+    chunk_kv = min(chunk_kv, t)
+    if s % chunk_q or t % chunk_kv:
+        raise ValueError(f"seq {s}/{t} not divisible by chunks "
+                         f"{chunk_q}/{chunk_kv}")
+    scale = 1.0 / math.sqrt(d)
+
+    def q_block(blk):
+        qb = jax.lax.dynamic_slice_in_dim(q, blk * chunk_q, chunk_q, 1)
+        q_pos = q_offset + blk * chunk_q + jnp.arange(chunk_q)
+        return _flash_inner(qb, k, v, q_pos, causal, window, chunk_kv,
+                            scale, softcap)
+
+    _, outs = jax.lax.scan(lambda c, i: (c, q_block(i)), None,
+                           jnp.arange(s // chunk_q))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window: int, causal=True, q_offset=0,
+                     chunk_q=512, chunk_kv=1024, softcap: float = 0.0):
+    """True O(S*W) sliding-window attention via per-chunk KV band gather."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk_q = min(chunk_q, s)
+    chunk_kv = min(chunk_kv, t)
+    if s % chunk_q or t % chunk_kv:
+        raise ValueError("seq not divisible by chunks")
+    # band for q chunk [qs, qs+cq): kv in (qs - window, qs + cq - 1]
+    nb = (window - 1 + chunk_q + chunk_kv - 1) // chunk_kv + 1
+    nb = min(nb, t // chunk_kv)
+    scale = 1.0 / math.sqrt(d)
+
+    def q_block(blk):
+        qb = jax.lax.dynamic_slice_in_dim(q, blk * chunk_q, chunk_q, 1)
+        q_start = blk * chunk_q
+        lo = q_start - (window - 1) + q_offset   # earliest visible kv pos
+        first = jnp.clip(lo // chunk_kv, 0, t // chunk_kv - nb)
+        kb = jax.lax.dynamic_slice_in_dim(k, first * chunk_kv,
+                                          nb * chunk_kv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, first * chunk_kv,
+                                          nb * chunk_kv, 1)
+        q_pos = q_offset + q_start + jnp.arange(chunk_q)
+        s_ = jnp.einsum("bqhd,bthd->bhqt", qb, kb,
+                        preferred_element_type=jnp.float32) * scale
+        s_ = _softcap(s_, softcap)
+        k_pos = first * chunk_kv + jnp.arange(nb * chunk_kv)
+        m = k_pos[None, :] > q_pos[:, None] - window
+        if causal:
+            m &= k_pos[None, :] <= q_pos[:, None]
+        s_ = s_ + jnp.where(m, 0.0, NEG_INF)[None, None]
+        s_ = hint(s_, "batch", "model", None, None)
+        p = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhqt,bthd->bqhd", p.astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+        return o
+
+    _, outs = jax.lax.scan(lambda c, i: (c, q_block(i)), None,
+                           jnp.arange(s // chunk_q))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def chunked_attention_cp(q, k, v, *, causal=True, window=0, q_offset=0,
+                         chunk_q=512, chunk_kv=1024, softcap: float = 0.0):
+    """Context-parallel flash: the Q-CHUNK axis (not heads) carries the
+    "model" mesh axis.  Used when n_heads doesn't divide the model axis
+    (phi4 24H, hymba 25H, arctic 56H on a 16-way axis): instead of
+    replicating attention 16x, each shard owns S/16 of the query rows and
+    streams the (small, GQA) KV blocks.  §Perf hillclimb #1."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk_q = min(chunk_q, s)
+    chunk_kv = min(chunk_kv, t)
+    if s % chunk_q or t % chunk_kv:
+        raise ValueError("seq not divisible by chunks")
+    nc = s // chunk_q
+    scale = 1.0 / math.sqrt(d)
+    qc = q.reshape(b, nc, chunk_q, h, d)
+    qc = hint(qc, "batch", "model", None, None, None)
+    n_blocks = t // chunk_kv
+
+    def body(carry, blk):
+        acc, m_run, l_run = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, blk * chunk_kv, chunk_kv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, blk * chunk_kv, chunk_kv, 1)
+        s_ = jnp.einsum("bnqhd,bthd->bnhqt", qc, kb,
+                        preferred_element_type=jnp.float32) * scale
+        s_ = _softcap(s_, softcap)
+        q_pos = (q_offset + jnp.arange(nc)[:, None] * chunk_q
+                 + jnp.arange(chunk_q)[None, :])          # (nc, cq)
+        k_pos = blk * chunk_kv + jnp.arange(chunk_kv)
+        m = jnp.ones((nc, chunk_q, chunk_kv), bool)
+        if causal:
+            m &= k_pos[None, None, :] <= q_pos[..., None]
+        if window > 0:
+            m &= k_pos[None, None, :] > q_pos[..., None] - window
+        s_ = s_ + jnp.where(m, 0.0, NEG_INF)[:, None][None]
+        s_ = hint(s_, "batch", "model", None, None, None)
+        m_new = jnp.maximum(m_run, s_.max(axis=-1))
+        p = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnhqt,bthd->bnhqd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, nc, h, chunk_q, d), jnp.float32)
+    m0 = jnp.full((b, nc, h, chunk_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nc, h, chunk_q), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                          jnp.arange(n_blocks))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]      # (B,nc,H,cq,D)
+    out = jnp.moveaxis(out, 3, 2).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def banded_attention_cp(q, k, v, *, window: int, causal=True, q_offset=0,
+                        chunk_q=512, chunk_kv=1024, softcap: float = 0.0):
+    """Context-parallel sliding window: all q chunks processed as a
+    batched (shardable) axis; each chunk gathers its own KV band.  Used
+    when heads don't divide the model axis (hymba 25H)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk_q = min(chunk_q, s)
+    chunk_kv = min(chunk_kv, t)
+    if s % chunk_q or t % chunk_kv:
+        raise ValueError("seq not divisible by chunks")
+    nc = s // chunk_q
+    nb = (window - 1 + chunk_q + chunk_kv - 1) // chunk_kv + 1
+    nb = min(nb, t // chunk_kv)
+    scale = 1.0 / math.sqrt(d)
+    qc = q.reshape(b, nc, chunk_q, h, d)
+    qc = hint(qc, "batch", "model", None, None, None)
+
+    q_starts = jnp.arange(nc) * chunk_q
+    lo = q_starts - (window - 1) + q_offset
+    first = jnp.clip(lo // chunk_kv, 0, t // chunk_kv - nb)   # (nc,)
+
+    def band(fi):
+        kb = jax.lax.dynamic_slice_in_dim(k, fi * chunk_kv, nb * chunk_kv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, fi * chunk_kv, nb * chunk_kv, 1)
+        return kb, vb
+
+    kbs, vbs = jax.vmap(band, out_axes=(1, 1))(first)   # (B,nc,nbk,H,D)
+    s_ = jnp.einsum("bnqhd,bnthd->bnhqt", qc, kbs,
+                    preferred_element_type=jnp.float32) * scale
+    s_ = _softcap(s_, softcap)
+    q_pos = q_offset + q_starts[:, None] + jnp.arange(chunk_q)[None]
+    k_pos = first[:, None] * chunk_kv + jnp.arange(nb * chunk_kv)[None]
+    m = k_pos[:, None, :] > q_pos[..., None] - window
+    if causal:
+        m &= k_pos[:, None, :] <= q_pos[..., None]
+    s_ = s_ + jnp.where(m, 0.0, NEG_INF)[None, :, None]
+    s_ = hint(s_, "batch", "model", None, None, None)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bnhqt,bnthd->bnqhd", p.astype(vbs.dtype), vbs,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              chunk_q=512, chunk_kv=1024, softcap: float = 0.0,
+              context_parallel: str = "auto"):
+    """Dispatch.  k/v are (B,T,Hkv,D); expanded to full heads here.
+
+    context_parallel: "auto" = shard q chunks over "model" when the head
+    count doesn't divide the model axis; "never" | "always" override.
+    """
+    h = q.shape[2]
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    k = hint(k, "batch", None, "model", None)
+    v = hint(v, "batch", None, "model", None)
+    s, t = q.shape[1], k.shape[1]
+    if s * t <= 256 * 256 or s % min(chunk_q, s) or t % min(chunk_kv, t):
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, softcap=softcap)
+    msize = axis_size("model")
+    want_cp = (context_parallel == "always" or
+               (context_parallel == "auto" and msize > 1 and h % msize))
+    if want_cp:
+        # q-chunk count must be a multiple of the model axis: shrink
+        # chunk_q if needed (train_4k: 4096/512 = 8 chunks < 16 shards)
+        cq = min(chunk_q, s)
+        if (s // cq) % msize and s % msize == 0:
+            cq = max(s // msize, 1)
+        if (s // cq) % msize == 0:
+            if window and window < t:
+                # banded CP gathers ~(window/chunk_q)x duplicated KV per
+                # chunk: only a win when chunk_q >= window (measured:
+                # hymba prefill 1.5x win, hymba train 0.8x regression)
+                if cq >= window or context_parallel == "always":
+                    return banded_attention_cp(
+                        q, k, v, window=window, causal=causal,
+                        q_offset=q_offset, chunk_q=cq, chunk_kv=chunk_kv,
+                        softcap=softcap)
+            else:
+                return chunked_attention_cp(
+                    q, k, v, causal=causal, window=window,
+                    q_offset=q_offset, chunk_q=cq, chunk_kv=chunk_kv,
+                    softcap=softcap)
+    if window and window < t:
+        return banded_attention(q, k, v, window=window, causal=causal,
+                                q_offset=q_offset, chunk_q=chunk_q,
+                                chunk_kv=chunk_kv, softcap=softcap)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, chunk_q=chunk_q,
+                             chunk_kv=chunk_kv, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, ring-buffer KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),  # absolute pos per slot
+    }
+
+
+def update_kv_cache(cache, k_new, v_new, pos):
+    """k_new/v_new (B,1,Hkv,D); pos scalar int32 absolute position."""
+    w = cache["k"].shape[1]
+    slot = jnp.mod(pos, w)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    p = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.asarray(pos, jnp.int32)[None], slot, 0)
+    return {"k": k, "v": v, "pos": p}
+
+
+def decode_attention(q, cache, pos, *, window=0, softcap: float = 0.0):
+    """q (B,1,H,D) against ring cache; returns (B,1,H,D).
+
+    Sharding: heads over "model" when divisible; otherwise fall back to
+    head_dim sharding (contraction-sharded scores + tiny all-reduce) so
+    non-divisible-head archs (arctic 56H, hymba 25H) don't replicate the
+    repeated-KV tensor across the model axis.  §Perf hillclimb #2."""
+    b, _, h, d = q.shape
+    k = repeat_kv(cache["k"], h)
+    v = repeat_kv(cache["v"], h)
+    msize = axis_size("model")
+    if DECODE_HEADDIM_SHARD and msize > 1 and h % msize and d % msize == 0:
+        k = hint(k, "batch", None, None, "model")
+        v = hint(v, "batch", None, None, "model")
+    else:
+        k = hint(k, "batch", None, "model", None)
+        v = hint(v, "batch", None, "model", None)
+    s_ = jnp.einsum("bqhd,bthd->bhqt", q, k,
+                    preferred_element_type=jnp.float32) / math.sqrt(d)
+    s_ = _softcap(s_, softcap)
+    kp = cache["pos"]
+    valid = (kp >= 0) & (kp <= pos)
+    if window > 0:
+        valid &= kp > pos - window
+    s_ = s_ + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)

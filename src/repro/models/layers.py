@@ -1,0 +1,73 @@
+"""Shared functional building blocks (no flax — plain pytrees)."""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish, like maxtext defaults)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def activate(h_gate, h_up, kind: str):
+    """Fused MLP activation.  For non-gated kinds ``h_gate`` is the input."""
+    if kind == "swiglu":
+        return jax.nn.silu(h_gate) * h_up
+    if kind == "squared_relu":
+        r = jax.nn.relu(h_gate)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h_gate)
+    if kind == "relu":
+        return jax.nn.relu(h_gate)
+    raise ValueError(kind)
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+         "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype)}
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(p, x, kind: str):
+    if kind == "swiglu":
+        h = activate(x @ p["w_gate"], x @ p["w_up"], kind)
+    else:
+        h = activate(x @ p["w_up"], None, kind)
+    return h @ p["w_down"]
+
+
+def take_embedding(table, ids):
+    return jnp.take(table, ids, axis=0)

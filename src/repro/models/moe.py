@@ -1,0 +1,142 @@
+"""Top-k token-choice MoE with sort-based capacity dispatch (GShard-style
+drops, Megablocks-style sort) — static shapes, pjit/GSPMD friendly.
+
+Tokens are processed in groups (default: one group per batch row).  Within
+a group: route -> stable-sort by expert -> take the first ``capacity``
+tokens per expert -> batched expert FFN einsum (experts shardable over the
+"model" mesh axis => GSPMD emits the all-to-all) -> combine by gate weight.
+Dropped tokens pass through the residual only (standard capacity-drop).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding.hints import axis_size, hint
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, activation: str,
+             dense_residual: bool = False, dense_ff: int = 0,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts), dtype=jnp.float32),
+        "w_up": dense_init(ks[2], (n_experts, d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (n_experts, d_ff, d_model), dtype=dtype),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = dense_init(ks[1], (n_experts, d_model, d_ff), dtype=dtype)
+    if dense_residual:
+        from repro.models.layers import init_mlp
+        p["dense_mlp"] = init_mlp(ks[4], d_model, dense_ff or d_ff,
+                                  activation, dtype=dtype)
+    return p
+
+
+def capacity_for(group_size: int, top_k: int, n_experts: int,
+                 factor: float) -> int:
+    c = int(math.ceil(group_size * top_k / n_experts * factor))
+    c = max(c, 1)
+    return min(c, group_size * top_k)
+
+
+def _route_group(x, router_w, top_k: int, capacity: int):
+    """x (S,d) -> dispatch indices for one token group.
+
+    Returns:
+      src_token  (E,C)  token index feeding each expert slot
+      slot_valid (E,C)  slot occupancy
+      tok_slot   (S,k)  flat slot id for each token's k-th choice
+      tok_keep   (S,k)  survived capacity
+      gates      (S,k)  renormalized gate weights
+      probs      (S,E)  full router probabilities (for aux loss)
+    """
+    s, _ = x.shape
+    e = router_w.shape[1]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (S,k)
+    gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(-1)                            # (S*k,)
+    order = jnp.argsort(flat_e, stable=True)                   # (S*k,)
+    sorted_e = flat_e[order]
+    first_of = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(s * top_k) - first_of              # rank in expert
+    inv = jnp.argsort(order, stable=True)
+    pos = pos_sorted[inv].reshape(s, top_k)
+    tok_keep = pos < capacity
+    tok_slot = expert_idx * capacity + jnp.minimum(pos, capacity - 1)
+
+    offsets = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    counts = jnp.searchsorted(sorted_e, jnp.arange(e), side="right") - offsets
+    slot_rank = jnp.arange(capacity)[None, :]
+    slot_valid = slot_rank < jnp.minimum(counts, capacity)[:, None]  # (E,C)
+    src_sorted = jnp.clip(offsets[:, None] + slot_rank, 0, s * top_k - 1)
+    src_token = order[src_sorted] // top_k                     # (E,C)
+    return src_token, slot_valid, tok_slot, tok_keep, gates, probs
+
+
+def moe_ffn(p, x, *, top_k: int, activation: str, capacity_factor: float,
+            group_size: int = 0, dense_residual: bool = False):
+    """x (B,S,d) -> (B,S,d), aux_loss (scalar f32)."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    g = group_size or s
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    if n_tok % g:
+        g = n_tok                       # single group fallback (decode etc.)
+    groups = tokens.reshape(-1, g, d)   # (G, S_g, d)
+    cap = capacity_for(g, top_k, e, capacity_factor)
+
+    src_token, slot_valid, tok_slot, tok_keep, gates, probs = jax.vmap(
+        lambda xx: _route_group(xx, p["router"], top_k, cap))(groups)
+
+    # dispatch: (G,E,C,d)
+    x_slots = jax.vmap(lambda xx, idx: xx[idx])(groups, src_token)
+    x_slots = x_slots * slot_valid[..., None].astype(x_slots.dtype)
+    # expert-parallel layout: E over "model" when divisible (arctic 128/16)
+    # — this constraint IS the all-to-all; otherwise ff is tensor-sharded.
+    x_slots = hint(x_slots, "batch", "model", None, None)
+
+    # expert FFN: experts shardable over "model" axis
+    if activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x_slots, p["w_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", x_slots, p["w_up"])
+    else:
+        h = jnp.einsum("gecd,edf->gecf", x_slots, p["w_up"])
+        if activation == "squared_relu":
+            r = jax.nn.relu(h)
+            h = r * r
+        else:
+            h = jax.nn.gelu(h)
+    expert_parallel = e % max(axis_size("model"), 1) == 0
+    if expert_parallel:
+        h = hint(h, "batch", "model", None, None)
+    else:
+        h = hint(h, "batch", None, None, "model")
+    y_slots = jnp.einsum("gecf,efd->gecd", h, p["w_down"])     # (G,E,C,d)
+    y_slots = hint(y_slots, "batch", "model", None, None)
+
+    # combine: gather each token's k slots
+    y_flat = y_slots.reshape(groups.shape[0], e * cap, d)
+    y_tok = jax.vmap(lambda yy, idx: yy[idx])(y_flat, tok_slot)  # (G,S,k,d)
+    w = (gates * tok_keep).astype(y_tok.dtype)                  # (G,S,k)
+    y = jnp.einsum("gskd,gsk->gsd", y_tok, w)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))                                # (E,)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e).mean(axis=(0, 1))
+    aux = e * jnp.sum(top1 * me)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    if dense_residual:
+        from repro.models.layers import mlp
+        y = y + mlp(p["dense_mlp"], x, activation)
+    return y, aux.astype(jnp.float32)

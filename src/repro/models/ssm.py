@@ -1,0 +1,133 @@
+"""Mamba-style selective SSM (diagonal state space) with chunked scan.
+
+Training/prefill uses a chunked parallel scan: the sequence is processed
+in chunks of Q steps; within a chunk the (B,Q,d_in,n) discretized tensors
+are materialized and combined with an associative scan; the hidden state
+(B,d_in,n) is carried across chunks with ``lax.scan``.  Decode is a single
+recurrent step.  The Pallas TPU kernel (kernels/ssm_scan.py) implements
+the same chunked recurrence with VMEM-resident state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding.hints import hint
+
+
+def init_ssm(key, d_model: int, n_state: int, expand: int = 2,
+             conv_k: int = 4, dtype=jnp.float32):
+    d_in = expand * d_model
+    ks = jax.random.split(key, 7)
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[5], (d_in,), jnp.float32,
+                                   jnp.log(1e-3), jnp.log(1e-1)))))
+    return {
+        "w_in": dense_init(ks[0], (d_model, 2 * d_in), dtype=dtype),
+        "conv_w": dense_init(ks[1], (conv_k, d_in), scale=0.5, dtype=dtype),
+        "w_bc": dense_init(ks[2], (d_in, 2 * n_state), dtype=dtype),
+        "w_dt": dense_init(ks[3], (d_in, d_in), scale=0.01, dtype=dtype),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, n_state + 1, dtype=jnp.float32)
+                         )[None, :].repeat(d_in, 0),       # (d_in,n)
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[4], (d_in, d_model), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x (B,S,di), w (K,di).  state (B,K-1,di)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out, new_state
+
+
+def _discretize(dt, bc, xc, a_neg, n_state):
+    """dt (B,Q,di); bc (B,Q,2n); xc (B,Q,di) -> dA,dBx (B,Q,di,n), C (B,Q,n)."""
+    b_in, c_out = bc[..., :n_state], bc[..., n_state:]
+    da = jnp.exp(dt[..., None] * a_neg[None, None])            # (B,Q,di,n)
+    dbx = (dt * xc)[..., None] * b_in[:, :, None, :]
+    return da, dbx, c_out
+
+
+def _chunk_scan(da, dbx, h0):
+    """Associative scan of h_t = da_t*h + dbx_t within a chunk.
+
+    da, dbx: (B,Q,di,n) f32; h0: (B,di,n).  Returns hs (B,Q,di,n), h_end.
+    """
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+    a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    hs = b_cum + a_cum * h0[:, None]
+    return hs, hs[:, -1]
+
+
+def ssm_core(p, xc, dt, bc, h0, n_state: int, chunk: int = 256):
+    """Chunked selective scan.  xc,dt (B,S,di); bc (B,S,2n)."""
+    b, s, di = xc.shape
+    a_neg = -jnp.exp(p["A_log"])                               # (di,n)
+    q = min(chunk, s)
+    if s % q:
+        q = s
+    nc = s // q
+
+    def body(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * q, q, 1)
+        da, dbx, c_out = _discretize(
+            sl(dt).astype(jnp.float32), sl(bc).astype(jnp.float32),
+            sl(xc).astype(jnp.float32), a_neg, n_state)
+        da = hint(da, "batch", None, "model", None)
+        dbx = hint(dbx, "batch", None, "model", None)
+        hs, h_end = _chunk_scan(da, dbx, h)
+        yc = jnp.einsum("bqdn,bqn->bqd", hs, c_out.astype(jnp.float32))
+        return h_end, yc
+
+    h0 = jnp.zeros((b, di, n_state), jnp.float32) if h0 is None else h0
+    h_end, ys = jax.lax.scan(body, h0, jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+    return y.astype(xc.dtype), h_end
+
+
+def ssm_forward(p, x, *, n_state: int, chunk: int = 256, state=None):
+    """Full layer.  x (B,S,d_model) -> y, new_state (for decode handoff).
+
+    state = {"h": (B,di,n), "conv": (B,K-1,di)} or None.
+    """
+    b, s, d = x.shape
+    xz = x @ p["w_in"]
+    di = xz.shape[-1] // 2
+    xp, z = xz[..., :di], xz[..., di:]
+    xp = hint(xp, "batch", None, "model")   # channel-parallel SSM heads
+    conv_state = None if state is None else state["conv"]
+    xp, new_conv = _causal_conv(xp, p["conv_w"], conv_state)
+    xp = jax.nn.silu(xp)
+    dt = jax.nn.softplus(xp @ p["w_dt"] + p["dt_bias"].astype(xp.dtype))
+    bc = xp @ p["w_bc"]
+    h0 = None if state is None else state["h"]
+    y, h_end = ssm_core(p, xp, dt, bc, h0, n_state, chunk)
+    y = y + p["D"].astype(y.dtype) * xp
+    out = (y * jax.nn.silu(z)) @ p["w_out"]
+    new_state = {"h": h_end, "conv": new_conv}
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_model: int, n_state: int, expand: int,
+                   conv_k: int, dtype=jnp.bfloat16):
+    di = expand * d_model
+    return {"h": jnp.zeros((batch, di, n_state), jnp.float32),
+            "conv": jnp.zeros((batch, conv_k - 1, di), dtype)}
+
+
+def ssm_decode_step(p, x, state, *, n_state: int):
+    """x (B,1,d_model) single step."""
+    return ssm_forward(p, x, n_state=n_state, chunk=1, state=state)

@@ -1,0 +1,387 @@
+"""Model assembly: init / forward / decode for every assigned family.
+
+Layers are stacked (leading L axis) and traversed with ``lax.scan`` so
+96-layer configs compile in bounded time/memory; ``remat=True`` wraps the
+block body in ``jax.checkpoint``.  Decode carries per-layer caches through
+the same scan.
+
+Families:
+  dense / vlm : GQA + RoPE + (SwiGLU | squared-ReLU | GeLU) MLP, optional SWA
+  audio       : bidirectional encoder (frame embeddings in, codebook out)
+  moe         : GQA + top-k MoE FFN (sort-based capacity dispatch)
+  hybrid      : parallel attention + Mamba heads per layer (Hymba)
+  ssm         : alternating mLSTM / sLSTM pairs (xLSTM)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (dense_init, embed_init, init_mlp, mlp,
+                                 rms_norm, take_embedding)
+from repro.models.rope import apply_rope
+from repro.sharding.hints import hint
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.q_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.q_dim, cfg.d_model), dtype=dtype),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    fam = cfg.family
+    if fam == "ssm":  # xLSTM pair
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlstm": xlstm_lib.init_mlstm(ks[0], cfg.d_model, cfg.n_heads,
+                                          cfg.proj_factor, dtype=dtype),
+            "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+            "slstm": xlstm_lib.init_slstm(ks[1], cfg.d_model, cfg.n_heads,
+                                          dtype=dtype),
+            "ln3": jnp.zeros((cfg.d_model,), jnp.float32),
+            "mlp": init_mlp(ks[2], cfg.d_model, int(cfg.d_model * 4 / 3),
+                            "gelu", dtype=dtype),
+        }
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": _init_attn(ks[0], cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if fam == "moe":
+        p["moe"] = moe_lib.init_moe(
+            ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.activation,
+            dense_residual=cfg.moe_dense_residual,
+            dense_ff=cfg.moe_dense_ff, dtype=dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation,
+                            dtype=dtype)
+    if fam == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm(ks[2], cfg.d_model, cfg.ssm_state,
+                                    cfg.ssm_expand, cfg.ssm_conv, dtype=dtype)
+    return p
+
+
+def init_model(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    n_stack = _n_stack(cfg)
+    block_keys = jax.random.split(k_blocks, n_stack)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(block_keys)
+    params = {
+        "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype=dtype)
+    return params
+
+
+def _n_stack(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        assert cfg.num_layers % 2 == 0, "xLSTM pairs need even num_layers"
+        return cfg.num_layers // 2
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# Block apply (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(p, cfg: ModelConfig, x, positions, *, window: int,
+                chunk_q: int, chunk_kv: int, context_parallel: str = "auto"):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = hint(q, "batch", None, "model", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attn_lib.attention(q, k, v, causal=cfg.causal, window=window,
+                           chunk_q=chunk_q, chunk_kv=chunk_kv,
+                           softcap=cfg.attn_logit_softcap,
+                           context_parallel=context_parallel)
+    o = hint(o, "batch", None, "model", None)
+    return o.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+def _block_apply(p, cfg: ModelConfig, x, positions, *, window: int,
+                 chunk_q: int, chunk_kv: int, ssm_chunk: int,
+                 moe_group: int, context_parallel: str = "auto"):
+    """Returns (x, aux_loss)."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam == "ssm":
+        h, _ = xlstm_lib.mlstm_block(p["mlstm"], rms_norm(x, p["ln1"]),
+                                     cfg.n_heads, chunk=ssm_chunk)
+        x = x + h
+        h, _ = xlstm_lib.slstm_block(p["slstm"], rms_norm(x, p["ln2"]),
+                                     cfg.n_heads)
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln3"]), "gelu")
+        return x, aux
+
+    a_in = rms_norm(x, p["ln1"])
+    a_out = _attn_apply(p["attn"], cfg, a_in, positions, window=window,
+                        chunk_q=chunk_q, chunk_kv=chunk_kv,
+                        context_parallel=context_parallel)
+    if fam == "hybrid":
+        s_out, _ = ssm_lib.ssm_forward(p["ssm"], a_in, n_state=cfg.ssm_state,
+                                       chunk=ssm_chunk)
+        a_out = 0.5 * (a_out + s_out)
+    x = x + a_out
+    m_in = rms_norm(x, p["ln2"])
+    if fam == "moe":
+        y, aux = moe_lib.moe_ffn(
+            p["moe"], m_in, top_k=cfg.top_k, activation=cfg.activation,
+            capacity_factor=cfg.moe_capacity_factor, group_size=moe_group,
+            dense_residual=cfg.moe_dense_residual)
+    else:
+        y = mlp(p["mlp"], m_in, cfg.activation)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    if "frames" in batch:                      # audio stub frontend
+        return batch["frames"].astype(params["embed"].dtype)
+    return take_embedding(params["embed"], batch["tokens"])
+
+
+def forward(cfg: ModelConfig, params, batch, *, window: int = -1,
+            chunk_q: int = 512, chunk_kv: int = 1024, ssm_chunk: int = 256,
+            moe_group: int = 0, remat: bool = False, return_hidden=False,
+            context_parallel: str = "auto", seq_parallel: bool = False,
+            remat_policy: str = "full"):
+    """Full-sequence forward.  Returns (logits, aux_loss).
+
+    ``window``: -1 => use cfg.sliding_window; 0 => force full attention;
+    >0 => override (used for the long_500k SWA variants of dense archs).
+    ``seq_parallel``: shard the residual stream's sequence dim over the
+    "model" axis between blocks (megatron sequence parallelism — GSPMD
+    turns the per-block all-reduces into all-gather + reduce-scatter).
+    """
+    x = embed_inputs(cfg, params, batch)
+    res_hint = (lambda t: hint(t, "batch", "model", None)) if seq_parallel \
+        else (lambda t: hint(t, "batch", None, None))
+    x = res_hint(x)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    w = cfg.sliding_window if window < 0 else window
+
+    def body(carry, p_l):
+        xc, aux = carry
+        xc, a = _block_apply(p_l, cfg, xc, positions, window=w,
+                             chunk_q=chunk_q, chunk_kv=chunk_kv,
+                             ssm_chunk=ssm_chunk, moe_group=moe_group,
+                             context_parallel=context_parallel)
+        xc = res_hint(xc)
+        return (xc, aux + a), None
+
+    if remat and remat_policy == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        body_fn = jax.checkpoint(body)
+    else:
+        body_fn = body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, aux
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    return x @ head, aux
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, loss_chunk: int = 512,
+            **fwd_kw):
+    """Sequence-chunked cross-entropy (never materializes (B,S,V) f32).
+
+    Causal LM: predict token t+1 from t.  Audio (encoder): labels given
+    per frame, no shift.  Returns (loss, aux).
+    """
+    hidden, aux = forward(cfg, params, batch, return_hidden=True, **fwd_kw)
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    if cfg.is_encoder_only:
+        targets = batch["labels"]
+        hs, tg = hidden, targets
+    else:
+        tokens = batch["tokens"]
+        hs, tg = hidden[:, :-1], tokens[:, 1:]
+    b, s, d = hs.shape
+    c = min(loss_chunk, s)
+    if s % c:
+        c = s
+    hs = hs.reshape(b, s // c, c, d)
+    tg = tg.reshape(b, s // c, c)
+
+    @jax.checkpoint  # recompute the (B,c,V) logits in backward: the whole
+    def chunk_ce(carry, inp):  # point of chunking is never storing them
+        h, t = inp                          # (B,c,d), (B,c)
+        logits = (h @ head).astype(jnp.float32)
+        logits = hint(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(chunk_ce, jnp.zeros((), jnp.float32),
+                            (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(tg, 1, 0)))
+    loss = total / (b * s)
+    return loss + 0.01 * aux, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with per-layer caches)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    fam = cfg.family
+    if fam == "ssm":
+        return {"m": xlstm_lib.init_mlstm_state(batch, cfg.d_model,
+                                                cfg.n_heads, cfg.proj_factor,
+                                                dtype=dtype),
+                "s": xlstm_lib.init_slstm_state(batch, cfg.d_model)}
+    kv_len = cache_len
+    if cfg.sliding_window:
+        kv_len = min(cache_len, cfg.sliding_window)
+    c = {"kv": attn_lib.init_kv_cache(batch, kv_len, cfg.n_kv_heads,
+                                      cfg.head_dim, dtype)}
+    if fam == "hybrid":
+        c["ssm"] = ssm_lib.init_ssm_state(batch, cfg.d_model, cfg.ssm_state,
+                                          cfg.ssm_expand, cfg.ssm_conv, dtype)
+    return c
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, window: int = -1):
+    """Stacked per-layer caches + position counter."""
+    w = cfg.sliding_window if window < 0 else window
+    if w and w > 0:
+        kv_len = min(cache_len, w)
+    else:
+        kv_len = cache_len
+    template = _layer_cache(cfg, batch, kv_len if w else cache_len, dtype)
+    n_stack = _n_stack(cfg)
+    caches = jax.tree_util.tree_map(
+        lambda t: jnp.zeros((n_stack,) + t.shape, t.dtype), template)
+    caches = _refill_pos(caches)
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _refill_pos(caches):
+    """kv position slots start at -1 (invalid) and xLSTM stabilizers at
+    NEG, not 0 — re-fill them after the zeros-stacking above."""
+    def fix_dict(c):
+        if isinstance(c, dict):
+            out = {}
+            for k, v in c.items():
+                if k == "pos" and isinstance(v, jnp.ndarray):
+                    out[k] = jnp.full_like(v, -1)
+                elif k == "m" and isinstance(v, tuple):
+                    out[k] = (v[0], v[1], jnp.full_like(v[2], xlstm_lib.NEG))
+                elif k == "mem" and isinstance(v, tuple):
+                    out[k] = (v[0], v[1], jnp.full_like(v[2], xlstm_lib.NEG))
+                else:
+                    out[k] = fix_dict(v)
+            return out
+        if isinstance(c, tuple):
+            return tuple(fix_dict(v) for v in c)
+        return c
+    return fix_dict(caches)
+
+
+def _block_decode(p, cfg: ModelConfig, x, cache, pos, *, window: int):
+    fam = cfg.family
+    if fam == "ssm":
+        h, m_new = xlstm_lib.mlstm_block(p["mlstm"], rms_norm(x, p["ln1"]),
+                                         cfg.n_heads, state=cache["m"],
+                                         chunk=1)
+        x = x + h
+        h, s_new = xlstm_lib.slstm_block(p["slstm"], rms_norm(x, p["ln2"]),
+                                         cfg.n_heads, state=cache["s"])
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln3"]), "gelu")
+        return x, {"m": m_new, "s": s_new}
+
+    b = x.shape[0]
+    a_in = rms_norm(x, p["ln1"])
+    pa = p["attn"]
+    q = (a_in @ pa["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (a_in @ pa["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (a_in @ pa["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    posb = pos[None, None] if pos.ndim == 0 else pos
+    q = apply_rope(q, jnp.asarray(pos)[None, None], cfg.rope_theta)
+    k = apply_rope(k, jnp.asarray(pos)[None, None], cfg.rope_theta)
+    kv = attn_lib.update_kv_cache(cache["kv"], k, v, pos)
+    o = attn_lib.decode_attention(q, kv, pos, window=window,
+                                  softcap=cfg.attn_logit_softcap)
+    a_out = o.reshape(b, 1, cfg.q_dim) @ pa["wo"]
+    new_cache = {"kv": kv}
+    if fam == "hybrid":
+        s_out, ssm_new = ssm_lib.ssm_decode_step(
+            p["ssm"], a_in, cache["ssm"], n_state=cfg.ssm_state)
+        a_out = 0.5 * (a_out + s_out)
+        new_cache["ssm"] = ssm_new
+    x = x + a_out
+    m_in = rms_norm(x, p["ln2"])
+    if fam == "moe":
+        y, _ = moe_lib.moe_ffn(
+            p["moe"], m_in, top_k=cfg.top_k, activation=cfg.activation,
+            capacity_factor=cfg.moe_capacity_factor,
+            dense_residual=cfg.moe_dense_residual)
+    else:
+        y = mlp(p["mlp"], m_in, cfg.activation)
+    return x + y, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, *, window: int = -1):
+    """One decode step.  tokens (B,1) int32 (or (B,1,d) frames).
+
+    Returns (logits (B,1,V), new_state).
+    """
+    if cfg.is_encoder_only:
+        raise ValueError(f"{cfg.arch_id} is encoder-only: no decode step")
+    w = cfg.sliding_window if window < 0 else window
+    x = take_embedding(params["embed"], tokens)
+    pos = state["pos"]
+
+    def body(xc, layer):
+        p_l, c_l = layer
+        xc, c_new = _block_decode(p_l, cfg, xc, c_l, pos, window=w)
+        return xc, c_new
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], state["layers"]))
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    return logits, {"layers": new_caches, "pos": pos + 1}

@@ -1,0 +1,208 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM
+[arXiv:2405.04517].
+
+mLSTM: matrix-memory LSTM with exponential gating.  Training/prefill uses
+the chunkwise form — intra-chunk quadratic (attention-like, (B,H,Q,Q)),
+inter-chunk recurrent state (C (B,H,Dh,Dh), n (B,H,Dh), stabilizer m
+(B,H)) carried with lax.scan.  All gate math is stabilized in log space.
+
+sLSTM: scalar-memory LSTM with exponential gating and block-diagonal
+recurrent weights (per head) — inherently sequential, lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.models.ssm import _causal_conv
+from repro.sharding.hints import hint
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, proj_factor: float = 2.0,
+               conv_k: int = 4, dtype=jnp.float32):
+    di = int(proj_factor * d_model)
+    di -= di % n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d_model, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (conv_k, di), scale=0.5, dtype=dtype),
+        "w_q": dense_init(ks[2], (di, di), dtype=dtype),
+        "w_k": dense_init(ks[3], (di, di), dtype=dtype),
+        "w_v": dense_init(ks[4], (di, di), dtype=dtype),
+        "w_if": dense_init(ks[5], (di, 2 * n_heads), scale=0.01, dtype=jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 jnp.linspace(3.0, 6.0, n_heads)]).astype(jnp.float32),
+        "hnorm": jnp.zeros((di,), jnp.float32),
+        "w_down": dense_init(ks[6], (di, d_model), dtype=dtype),
+    }
+
+
+def _cummax(x, axis):
+    return jax.lax.associative_scan(jnp.maximum, x, axis=axis)
+
+
+def mlstm_core(q, k, v, logi, logf, carry, chunk: int = 256):
+    """q,k,v (B,H,S,Dh) f32; logi,logf (B,H,S) f32.
+
+    carry: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)) — semantics: true state is
+    (C,n) * exp(m).  Returns h (B,H,S,Dh) and final carry.
+    """
+    bsz, hh, s, dh = q.shape
+    k = k / math.sqrt(dh)
+    qc = min(chunk, s)
+    if s % qc:
+        qc = s
+    nc = s // qc
+    if carry is None:
+        carry = (jnp.zeros((bsz, hh, dh, dh), jnp.float32),
+                 jnp.zeros((bsz, hh, dh), jnp.float32),
+                 jnp.full((bsz, hh), NEG, jnp.float32))
+
+    tri = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def body(car, idx):
+        ctil, ntil, m = car
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * qc, qc, 2)
+        qb, kb, vb = sl(q), sl(k), sl(v)
+        li, lf = sl(logi), sl(logf)
+        b_cum = jnp.cumsum(lf, axis=-1)                      # (B,H,Q)
+        g = li - b_cum
+        m_intra = b_cum + _cummax(g, axis=-1)
+        m_t = jnp.maximum(m[..., None] + b_cum, m_intra)     # (B,H,Q)
+
+        inter_scale = jnp.exp(m[..., None] + b_cum - m_t)    # (B,H,Q)
+        inter_num = inter_scale[..., None] * jnp.einsum(
+            "bhqd,bhde->bhqe", qb, ctil)
+        dmat = (b_cum[..., :, None] - b_cum[..., None, :]
+                + li[..., None, :] - m_t[..., None])         # (B,H,Q,Q)
+        w = jnp.exp(jnp.where(tri, dmat, NEG))
+        qk = jnp.einsum("bhqd,bhjd->bhqj", qb, kb)
+        wqk = w * qk
+        num = inter_num + jnp.einsum("bhqj,bhjd->bhqd", wqk, vb)
+        den = (inter_scale * jnp.einsum("bhqd,bhd->bhq", qb, ntil)
+               + wqk.sum(-1))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # chunk-end state update
+        b_last = b_cum[..., -1]
+        m_new = jnp.maximum(m + b_last, b_last + g.max(-1))
+        wj = jnp.exp(g + (b_last - m_new)[..., None])        # (B,H,Q)
+        decay = jnp.exp(m + b_last - m_new)
+        ctil = (decay[..., None, None] * ctil
+                + jnp.einsum("bhj,bhjd,bhje->bhde", wj, kb, vb))
+        ntil = decay[..., None] * ntil + jnp.einsum("bhj,bhjd->bhd", wj, kb)
+        return (ctil, ntil, m_new), h
+
+    car, hs = jax.lax.scan(body, carry, jnp.arange(nc))
+    h = jnp.moveaxis(hs, 0, 2).reshape(bsz, hh, s, dh)
+    return h, car
+
+
+def mlstm_block(p, x, n_heads: int, state=None, chunk: int = 256):
+    """x (B,S,d_model) -> y, new_state.  Residual applied by caller."""
+    b, s, d = x.shape
+    xz = x @ p["w_up"]
+    di = xz.shape[-1] // 2
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = hint(xi, "batch", None, "model")
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xi, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    dh = di // n_heads
+    to_heads = lambda t: jnp.moveaxis(
+        t.reshape(b, s, n_heads, dh), 1, 2).astype(jnp.float32)
+    q = to_heads(xc @ p["w_q"])
+    k = to_heads(xc @ p["w_k"])
+    v = to_heads(xi @ p["w_v"])
+    gates = (xc.astype(jnp.float32) @ p["w_if"] + p["b_if"])   # (B,S,2H)
+    logi = jnp.moveaxis(gates[..., :n_heads], 1, 2)
+    logf = jax.nn.log_sigmoid(jnp.moveaxis(gates[..., n_heads:], 1, 2))
+    carry = None if state is None else state["mem"]
+    h, car = mlstm_core(q, k, v, logi, logf, carry, chunk)
+    h = jnp.moveaxis(h, 2, 1).reshape(b, s, di).astype(x.dtype)
+    h = rms_norm(h, p["hnorm"])
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    return y, {"mem": car, "conv": new_conv}
+
+
+def init_mlstm_state(batch: int, d_model: int, n_heads: int,
+                     proj_factor: float, conv_k: int = 4, dtype=jnp.bfloat16):
+    di = int(proj_factor * d_model)
+    di -= di % n_heads
+    dh = di // n_heads
+    return {
+        "mem": (jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+                jnp.zeros((batch, n_heads, dh), jnp.float32),
+                jnp.full((batch, n_heads), NEG, jnp.float32)),
+        "conv": jnp.zeros((batch, conv_k - 1, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    fb = jnp.tile(jnp.linspace(3.0, 6.0, n_heads)[:, None], (1, dh)).reshape(-1)
+    return {
+        "w": dense_init(ks[0], (d_model, 4 * d_model), dtype=dtype),
+        "r": dense_init(ks[1], (n_heads, dh, 4 * dh), scale=0.1, dtype=dtype),
+        "b": jnp.concatenate([jnp.zeros((d_model,)),    # z
+                              jnp.zeros((d_model,)),    # i
+                              fb,                       # f (positive bias)
+                              jnp.zeros((d_model,))]).astype(jnp.float32),
+        "hnorm": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def slstm_scan(p, x, n_heads: int, state=None):
+    """x (B,S,d) -> h (B,S,d), new state.  Sequential over time."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    zx = x @ p["w"] + p["b"].astype(x.dtype)                  # (B,S,4d)
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = {"c": zeros, "n": zeros, "m": jnp.full((b, d), NEG, jnp.float32),
+                 "h": zeros}
+
+    def step(st, zx_t):
+        hp = st["h"].reshape(b, n_heads, dh).astype(p["r"].dtype)
+        rh = jnp.einsum("bhd,hde->bhe", hp, p["r"]).reshape(b, 4 * d)
+        pre = zx_t.astype(jnp.float32) + rh.astype(jnp.float32)
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + st["m"], it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(logf + st["m"] - m_new)
+        c = f * st["c"] + i * jnp.tanh(zt)
+        n = f * st["n"] + i
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "m": m_new, "h": h}, h
+
+    new_state, hs = jax.lax.scan(step, state, jnp.moveaxis(zx, 0, 1))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return h, new_state
+
+
+def slstm_block(p, x, n_heads: int, state=None):
+    h, new_state = slstm_scan(p, x, n_heads, state)
+    h = rms_norm(h, p["hnorm"])
+    return h, new_state
+
+
+def init_slstm_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d_model), NEG, jnp.float32),
+            "h": z}

@@ -1,0 +1,17 @@
+from repro.optim.optimizer import (
+    make_optimizer,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    cosine_schedule,
+    linear_warmup_cosine,
+    clip_by_global_norm,
+    global_norm,
+)
+
+__all__ = [
+    "make_optimizer", "sgd", "momentum", "adam", "adamw",
+    "cosine_schedule", "linear_warmup_cosine",
+    "clip_by_global_norm", "global_norm",
+]

@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    analyze_hlo,
+    roofline_terms,
+    HWSpec,
+    TPU_V5E,
+)
+
+__all__ = ["analyze_hlo", "roofline_terms", "HWSpec", "TPU_V5E"]

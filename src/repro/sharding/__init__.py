@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    param_specs,
+    batch_specs,
+    decode_state_specs,
+    named_shardings,
+)
+
+__all__ = ["param_specs", "batch_specs", "decode_state_specs",
+           "named_shardings"]

@@ -1,0 +1,80 @@
+"""Activation sharding hints (GSPMD with_sharding_constraint).
+
+Model code calls ``hint(x, "batch", None, "model", None)`` at layer
+boundaries; when a mesh is active (set by the launcher/dry-run via
+``set_mesh``) the hint becomes a with_sharding_constraint with every axis
+checked for divisibility — axes that don't divide are dropped, so any
+(arch x mesh) pair still lowers.  With no mesh set (CPU smoke tests) the
+hint is the identity.
+
+"batch" expands to every present data-parallel axis (("pod","data")).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+_MESH = None
+_SIZES = {}
+_FSDP_ONLY = False
+
+
+def set_mesh(mesh, fsdp_only: bool = False) -> None:
+    """Enable hints for ``mesh`` (or disable with None).
+
+    fsdp_only: pure ZeRO-3 data parallelism — the "model" axis joins the
+    batch axes and all tensor-parallel hints become no-ops."""
+    global _MESH, _SIZES, _FSDP_ONLY
+    _MESH = mesh
+    _FSDP_ONLY = fsdp_only
+    _SIZES = {} if mesh is None else dict(
+        zip(mesh.axis_names, mesh.devices.shape))
+
+
+def get_mesh():
+    return _MESH
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis under the active mesh (1 when disabled)."""
+    return _size(_expand(name))
+
+
+def _expand(name):
+    if name == "batch":
+        names = ("pod", "data", "model") if _FSDP_ONLY else ("pod", "data")
+        axes = tuple(a for a in names if a in _SIZES)
+        return axes if axes else None
+    if isinstance(name, str):
+        if _FSDP_ONLY and name == "model":
+            return None                    # TP hints no-op in ZeRO-3 mode
+        return name if name in _SIZES else None
+    return name
+
+
+def _size(axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, tuple):
+        return int(np.prod([_SIZES.get(a, 1) for a in axes]))
+    return _SIZES.get(axes, 1)
+
+
+def hint(x, *axes):
+    """Constrain ``x`` (rank must match len(axes)); divisibility-checked."""
+    if _MESH is None or not _SIZES:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"hint rank {len(axes)} != tensor rank {x.ndim}")
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        a = _expand(a)
+        s = _size(a)
+        spec.append(a if (a is not None and s > 1 and dim % s == 0) else None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

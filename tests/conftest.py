@@ -1,0 +1,22 @@
+import os
+
+# Tests must see the real (single) CPU device — the 512-device override
+# belongs to launch/dryrun.py ONLY.
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", "")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

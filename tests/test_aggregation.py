@@ -1,0 +1,65 @@
+"""Weighted aggregation: jnp path == kernel path == manual; properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import staleness_merge, weighted_average
+
+
+def _params(seed, shapes=((4, 3), (7,), (2, 2, 2))):
+    rng = np.random.default_rng(seed)
+    return {f"p{i}": jnp.asarray(rng.normal(size=s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+
+
+def test_weighted_average_matches_manual():
+    ps = [_params(i) for i in range(3)]
+    sizes = [10.0, 20.0, 30.0]
+    out = weighted_average(ps, sizes)
+    w = np.asarray(sizes) / np.sum(sizes)
+    for k in ps[0]:
+        manual = sum(wi * np.asarray(p[k]) for wi, p in zip(w, ps))
+        np.testing.assert_allclose(np.asarray(out[k]), manual, rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_path_matches_jnp_path():
+    ps = [_params(i) for i in range(4)]
+    sizes = [1.0, 2.0, 3.0, 4.0]
+    a = weighted_average(ps, sizes, use_kernel=False)
+    b = weighted_average(ps, sizes, use_kernel=True)
+    for k in a:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(2, 6), st.lists(st.floats(0.1, 100), min_size=2,
+                                   max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_aggregate_is_convex_combination(n, sizes):
+    n = min(n, len(sizes))
+    sizes = sizes[:n]
+    ps = [_params(i, shapes=((3, 2),)) for i in range(n)]
+    out = np.asarray(weighted_average(ps, sizes)["p0"])
+    stack = np.stack([np.asarray(p["p0"]) for p in ps])
+    assert (out <= stack.max(0) + 1e-5).all()
+    assert (out >= stack.min(0) - 1e-5).all()
+
+
+def test_staleness_merge_interpolates():
+    a, b = _params(0), _params(1)
+    mid = staleness_merge(a, b, 0.5)
+    for k in a:
+        np.testing.assert_allclose(
+            np.asarray(mid[k]),
+            0.5 * np.asarray(a[k]) + 0.5 * np.asarray(b[k]), rtol=1e-6)
+    same = staleness_merge(a, b, 0.0)
+    for k in a:
+        np.testing.assert_allclose(np.asarray(same[k]), np.asarray(a[k]))
+
+
+def test_empty_update_list_raises():
+    with pytest.raises(ValueError):
+        weighted_average([], [])

@@ -1,0 +1,39 @@
+"""Checkpoint round-trips."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def test_roundtrip_nested_tree(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "blocks": [jnp.ones((2,)), jnp.zeros((3,))]},
+            "opt": {"m": {"w": jnp.full((2, 3), 0.5)},
+                    "t": jnp.asarray(7, jnp.int32)}}
+    save_checkpoint(str(tmp_path), 42, tree, metadata={"note": "x"})
+    assert latest_step(str(tmp_path)) == 42
+    out = load_checkpoint(str(tmp_path), 42, tree)
+    import jax
+    la = jax.tree_util.tree_leaves(tree)
+    lb = jax.tree_util.tree_leaves(out)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_latest_step_picks_max(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    for s in (1, 5, 3):
+        save_checkpoint(str(tmp_path), s, t)
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 0, {"w": jnp.zeros((3,))})
+
+
+def test_latest_step_empty(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None

@@ -1,0 +1,80 @@
+"""Config registry + derived quantities."""
+
+import pytest
+
+from repro.config import get_arch, list_archs
+from repro.config.base import INPUT_SHAPES
+
+ASSIGNED = {
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+}
+
+PARAM_TARGETS = {  # billions, tolerance band
+    "granite-20b": (18, 23), "nemotron-4-340b": (320, 360),
+    "phi4-mini-3.8b": (3.5, 5.0), "llama3.2-1b": (1.2, 1.7),
+    "mixtral-8x7b": (44, 49), "hubert-xlarge": (0.8, 1.1),
+    "hymba-1.5b": (1.3, 1.9), "arctic-480b": (450, 500),
+    "xlstm-350m": (0.28, 0.42), "chameleon-34b": (32, 37),
+}
+
+
+def test_all_assigned_registered():
+    archs = list_archs()
+    for a in ASSIGNED:
+        assert a in archs
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_exact_dims(arch):
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    c = get_arch(arch)
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v)
+
+
+@pytest.mark.parametrize("arch", sorted(PARAM_TARGETS))
+def test_param_counts_in_band(arch):
+    lo, hi = PARAM_TARGETS[arch]
+    n = get_arch(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params_less_than_total():
+    for arch in ("mixtral-8x7b", "arctic-480b"):
+        c = get_arch(arch)
+        assert c.active_param_count() < c.param_count()
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_invariants(arch):
+    r = get_arch(arch).reduced()
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    assert (r.n_experts or 0) <= 4
+    assert r.family == get_arch(arch).family
+    assert r.n_heads % r.n_kv_heads == 0
+    assert r.param_count() > 0
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_subquadratic_flags():
+    assert get_arch("xlstm-350m").subquadratic
+    assert get_arch("hymba-1.5b").subquadratic
+    assert get_arch("mixtral-8x7b").subquadratic      # SWA
+    assert not get_arch("nemotron-4-340b").subquadratic

@@ -1,0 +1,147 @@
+"""Pallas kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fedagg_op, gqa_flash_attention, ssm_scan_op
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import fedagg_ref, flash_attention_ref, ssm_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,t,d,bq,bk", [
+    (128, 128, 64, 64, 64),
+    (256, 256, 32, 128, 128),
+    (64, 256, 64, 64, 64),      # cross-attention shape
+    (256, 128, 16, 64, 128),    # small head_dim, uneven blocks
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(s, t, d, bq, bk, causal):
+    if causal and s > t:
+        pytest.skip("causal with s>t undefined here")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (3, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (3, t, d), jnp.float32)
+    v = jax.random.normal(ks[2], (3, t, d), jnp.float32)
+    off = t - s if causal else 0
+    out = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 256, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 32), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 128, 64)).astype(dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_gqa_wrapper_matches_model_attention():
+    from repro.models.attention import naive_attention, repeat_kv
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 32), jnp.float32)
+    out = gqa_flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+    ref = naive_attention(q, repeat_kv(k, 8), repeat_kv(v, 8), causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,n,chunk,bd", [
+    (2, 64, 32, 8, 16, 16),
+    (1, 128, 64, 16, 32, 64),
+    (3, 32, 16, 4, 32, 8),
+])
+def test_ssm_scan_shapes(b, s, d, n, chunk, bd):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)))
+    b_in = jax.random.normal(ks[2], (b, s, n), jnp.float32)
+    c_out = jax.random.normal(ks[3], (b, s, n), jnp.float32)
+    a_log = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None].repeat(d, 0)
+    y = ssm_scan_op(x, dt, b_in, c_out, a_log, chunk=chunk, block_d=bd,
+                    interpret=True)
+    yr = ssm_scan_ref(x, dt, b_in, c_out, a_log)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_bf16():
+    ks = jax.random.split(KEY, 4)
+    b, s, d, n = 2, 64, 32, 8
+    x = jax.random.normal(ks[0], (b, s, d)).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d))).astype(jnp.bfloat16)
+    b_in = jax.random.normal(ks[2], (b, s, n)).astype(jnp.bfloat16)
+    c_out = jax.random.normal(ks[3], (b, s, n)).astype(jnp.bfloat16)
+    a_log = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None].repeat(d, 0)
+    y = ssm_scan_op(x, dt, b_in, c_out, a_log, chunk=16, block_d=16,
+                    interpret=True)
+    yr = ssm_scan_ref(x, dt, b_in, c_out, a_log)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# fedagg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,bp", [(3, 100, 64), (8, 4096, 1024),
+                                    (50, 999, 256), (1, 17, 64)])
+def test_fedagg_shapes(n, p, bp):
+    ks = jax.random.split(KEY, 2)
+    u = jax.random.normal(ks[0], (n, p), jnp.float32)
+    w = jnp.abs(jax.random.normal(ks[1], (n,))) + 0.1
+    out = fedagg_op(u, w, block_p=bp, interpret=True)
+    ref = fedagg_ref(u, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedagg_dtypes(dtype):
+    u = (jnp.arange(12.0).reshape(3, 4) / 10).astype(dtype)
+    w = jnp.asarray([1.0, 1.0, 2.0])
+    out = fedagg_op(u, w, block_p=4, interpret=True)
+    ref = fedagg_ref(u, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))

@@ -1,0 +1,40 @@
+"""Wireless network model (paper §5.1)."""
+
+import numpy as np
+
+from repro.fl.network import WirelessNetwork
+
+
+def test_determinism_across_instances():
+    a = WirelessNetwork(10, (5, 10, 15, 20, 25), 2.0, 0.3, (30, 60), seed=4)
+    b = WirelessNetwork(10, (5, 10, 15, 20, 25), 2.0, 0.3, (30, 60), seed=4)
+    for c in range(10):
+        for r in range(5):
+            assert a.delay(c, r) == b.delay(c, r)
+
+
+def test_groups_have_increasing_means():
+    net = WirelessNetwork(50, (5, 10, 15, 20, 25), 2.0, 0.0, (30, 60), seed=0)
+    means = [np.mean([net.delay(c, r) for r in range(200)])
+             for c in (0, 10, 20, 30, 40)]
+    assert all(b > a for a, b in zip(means, means[1:]))
+
+
+def test_mu_increases_delays():
+    base = WirelessNetwork(10, (5.0,), 2.0, 0.0, (30, 60), seed=1)
+    fail = WirelessNetwork(10, (5.0,), 2.0, 0.5, (30, 60), seed=1)
+    d0 = np.mean([base.delay(c, r) for c in range(10) for r in range(50)])
+    d1 = np.mean([fail.delay(c, r) for c in range(10) for r in range(50)])
+    assert d1 > d0 + 10          # ~0.5 * E[U(30,60)] = ~22.5
+
+
+def test_failure_delay_bounds():
+    net = WirelessNetwork(5, (1.0,), 0.01, 1.0, (30, 60), seed=2)
+    for c in range(5):
+        d = net.delay(c, 0)
+        assert 30.0 <= d <= 62.0
+
+
+def test_attempt_gives_fresh_draws():
+    net = WirelessNetwork(5, (5.0,), 2.0, 0.0, (30, 60), seed=3)
+    assert net.delay(0, 0, attempt=0) != net.delay(0, 0, attempt=1)

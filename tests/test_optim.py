@@ -1,0 +1,64 @@
+"""Optimizer library."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adam, adamw, clip_by_global_norm, cosine_schedule,
+                         global_norm, linear_warmup_cosine, make_optimizer,
+                         momentum, sgd)
+from repro.optim.optimizer import apply_updates
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw"])
+def test_optimizers_minimize_quadratic(name):
+    opt = make_optimizer(name)
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    lr = 0.1 if name != "adam" else 0.3
+    for _ in range(200):
+        grads = jax.tree_util.tree_map(lambda p: 2 * p, params)
+        ups, state = opt.update(grads, state, params, lr)
+        params = apply_updates(params, ups)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+
+
+def test_adam_moments_are_f32_for_bf16_params():
+    opt = adam()
+    params = {"w": jnp.zeros((3,), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.float32
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the cap: unchanged
+    g2 = {"a": jnp.full((4,), 0.01)}
+    clipped2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]),
+                               np.asarray(g2["a"]), rtol=1e-6)
+
+
+def test_schedules():
+    lr = cosine_schedule(1.0, 100)
+    assert float(lr(0)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)
+    wlr = linear_warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(wlr(0)) == 0.0
+    assert float(wlr(10)) == pytest.approx(1.0)
+    assert float(wlr(5)) == pytest.approx(0.5)
+
+
+def test_weight_decay_pulls_to_zero():
+    opt = adamw(weight_decay=0.5)
+    params = {"w": jnp.asarray([1.0])}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.asarray([0.0])}
+    for _ in range(50):
+        ups, state = opt.update(zero_grads, state, params, 0.1)
+        params = apply_updates(params, ups)
+    assert float(jnp.abs(params["w"])[0]) < 0.2

@@ -1,0 +1,125 @@
+"""mLSTM chunkwise vs sequential oracle; SSM chunked vs ref; sLSTM
+stability; decode handoff equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import ssm_scan_ref
+from repro.models.ssm import init_ssm, ssm_core, ssm_decode_step, ssm_forward
+from repro.models.xlstm import (init_mlstm, init_slstm, mlstm_core,
+                                slstm_scan)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mlstm_sequential(q, k, v, logi, logf):
+    """Direct per-step recurrence oracle (stabilized)."""
+    bsz, hh, s, dh = q.shape
+    k = k / np.sqrt(dh)
+    C = np.zeros((bsz, hh, dh, dh), np.float64)
+    n = np.zeros((bsz, hh, dh), np.float64)
+    m = np.full((bsz, hh), -1e30, np.float64)
+    q, k, v = (np.asarray(x, np.float64) for x in (q, k, v))
+    logi, logf = np.asarray(logi, np.float64), np.asarray(logf, np.float64)
+    hs = np.zeros_like(q)
+    for t in range(s):
+        m_new = np.maximum(logf[..., t] + m, logi[..., t])
+        f = np.exp(logf[..., t] + m - m_new)
+        i = np.exp(logi[..., t] - m_new)
+        C = f[..., None, None] * C + i[..., None, None] * (
+            k[:, :, t, :, None] * v[:, :, t, None, :])
+        n = f[..., None] * n + i[..., None] * k[:, :, t]
+        num = np.einsum("bhd,bhde->bhe", q[:, :, t], C)
+        den = np.einsum("bhd,bhd->bh", q[:, :, t], n)
+        hs[:, :, t] = num / np.maximum(np.abs(den), np.exp(-m_new))[..., None]
+        m = m_new
+    return hs
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (48, 48), (40, 8)])
+def test_mlstm_chunked_matches_sequential(s, chunk):
+    b, h, dh = 2, 3, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, h, s, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, dh), jnp.float32)
+    logi = jax.random.normal(ks[3], (b, h, s), jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jax.random.normal(ks[4], (b, h, s), jnp.float32) + 2.0)
+    out, _ = mlstm_core(q, k, v, logi, logf, None, chunk=chunk)
+    ref = _mlstm_sequential(q, k, v, logi, logf)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunk_size_invariance():
+    b, h, s, dh = 1, 2, 64, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, h, s, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, dh), jnp.float32)
+    logi = jax.random.normal(ks[3], (b, h, s), jnp.float32)
+    logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, h, s)) + 2.0)
+    a, car_a = mlstm_core(q, k, v, logi, logf, None, chunk=8)
+    bb, car_b = mlstm_core(q, k, v, logi, logf, None, chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=2e-4,
+                               atol=2e-4)
+    for x, y in zip(car_a[:2], car_b[:2]):
+        # stabilizer m may differ; compare destabilized states
+        pass
+    np.testing.assert_allclose(
+        np.asarray(car_a[0] * jnp.exp(car_a[2])[..., None, None]),
+        np.asarray(car_b[0] * jnp.exp(car_b[2])[..., None, None]),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_long_sequence_stays_finite():
+    d, h = 16, 4
+    p = init_slstm(jax.random.PRNGKey(1), d, h)
+    x = jax.random.normal(KEY, (2, 512, d), jnp.float32) * 3.0
+    out, st = slstm_scan(p, x, h)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(jnp.isfinite(st["c"])))
+
+
+def test_slstm_state_handoff():
+    """scan(x) == scan(x1) then scan(x2, state)."""
+    d, h = 8, 2
+    p = init_slstm(jax.random.PRNGKey(1), d, h)
+    x = jax.random.normal(KEY, (1, 20, d), jnp.float32)
+    full, _ = slstm_scan(p, x, h)
+    a, st = slstm_scan(p, x[:, :9], h)
+    b, _ = slstm_scan(p, x[:, 9:], h, state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([a, b], 1)),
+                               np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_ssm_core_matches_ref():
+    b, s, d, n = 2, 64, 16, 4
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, d)))
+    bc = jax.random.normal(ks[2], (b, s, 2 * n), jnp.float32)
+    p = {"A_log": jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)
+                          )[None].repeat(d, 0)}
+    y, _ = ssm_core(p, x, dt, bc, None, n, chunk=16)
+    yr = ssm_scan_ref(x, dt, bc[..., :n], bc[..., n:], p["A_log"])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssm_forward_decode_handoff():
+    """Full-seq forward == prefix forward + per-step decode."""
+    d, n = 16, 4
+    p = init_ssm(jax.random.PRNGKey(2), d, n)
+    x = jax.random.normal(KEY, (1, 12, d), jnp.float32)
+    full, _ = ssm_forward(p, x, n_state=n, chunk=4)
+    pre, st = ssm_forward(p, x[:, :7], n_state=n, chunk=7)
+    outs = [pre]
+    for t in range(7, 12):
+        y, st = ssm_decode_step(p, x[:, t:t + 1], st, n_state=n)
+        outs.append(y)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)

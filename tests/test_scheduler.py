@@ -1,0 +1,113 @@
+"""FedDCT scheduler mechanics with a fake (instant) trainer."""
+
+import numpy as np
+import pytest
+
+from repro.config.base import FLConfig
+from repro.core.baselines import run_fedavg, run_fedasync, run_tifl
+from repro.core.scheduler import run_feddct
+from repro.fl.network import WirelessNetwork
+
+
+class FakeTrainer:
+    """No real learning: params is a counter; accuracy rises with rounds."""
+
+    class cfg:
+        arch_id = "fake"
+
+    def __init__(self):
+        self.n_evals = 0
+        self.trained = []
+
+    def init_params(self, seed=0):
+        return {"w": np.zeros(4, np.float32)}
+
+    def local_train(self, params, client_id, rnd_seed):
+        self.trained.append(client_id)
+        return {"w": params["w"] + 1.0}, 10
+
+    def evaluate(self, params, **kw):
+        self.n_evals += 1
+        return min(0.01 * self.n_evals, 0.99)
+
+
+def _fl(**kw):
+    base = dict(n_clients=20, n_tiers=4, tau=2, rounds=10, kappa=1,
+                omega=30.0, beta=1.2, seed=3)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _net(fl, mu=0.0):
+    return WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                           mu, fl.failure_delay, fl.seed)
+
+
+def test_feddct_runs_and_clock_monotone():
+    fl = _fl()
+    hist = run_feddct(FakeTrainer(), _net(fl), fl)
+    assert len(hist.accuracy) == fl.rounds
+    assert all(b >= a for a, b in zip(hist.times, hist.times[1:]))
+    assert all(1 <= t <= fl.n_tiers for t in hist.tier)
+
+
+def test_feddct_round_time_capped_by_omega():
+    fl = _fl(rounds=6)
+    hist = run_feddct(FakeTrainer(), _net(fl, mu=0.9), fl)
+    # per round the clock can advance at most omega (Eq. 5/6 cap)
+    deltas = np.diff([0] + hist.times)
+    # first delta includes the parallel profiling setup
+    assert all(d <= fl.omega + 1e-6 for d in deltas[1:])
+
+
+def test_feddct_stragglers_do_not_contribute():
+    fl = _fl(rounds=8)
+    tr = FakeTrainer()
+    hist = run_feddct(tr, _net(fl, mu=0.8), fl)
+    assert sum(hist.n_stragglers) > 0         # failures actually happened
+
+
+def test_feddct_faster_than_fedavg_with_stragglers():
+    """The paper's core claim, in miniature: same rounds, same network,
+    FedDCT's virtual clock ends earlier than FedAvg's."""
+    fl = _fl(rounds=10)
+    t_dct = run_feddct(FakeTrainer(), _net(fl, mu=0.4), fl).times[-1]
+    t_avg = run_fedavg(FakeTrainer(), _net(fl, mu=0.4), fl).times[-1]
+    assert t_dct < t_avg
+
+
+def test_tier_pointer_moves_up_when_accuracy_stalls():
+    class Stall(FakeTrainer):
+        def evaluate(self, params, **kw):
+            self.n_evals += 1
+            return 0.5 if self.n_evals % 2 else 0.1  # oscillates down
+
+    fl = _fl(rounds=12)
+    hist = run_feddct(Stall(), _net(fl), fl)
+    assert max(hist.tier) > 1                # regression pushed tier up
+
+
+def test_baselines_run():
+    fl = _fl(rounds=4)
+    for fn in (run_fedavg, run_tifl):
+        h = fn(FakeTrainer(), _net(fl, mu=0.2), fl)
+        assert len(h.accuracy) == fl.rounds
+    h = run_fedasync(FakeTrainer(), _net(fl, mu=0.2), fl, eval_every=2)
+    assert len(h.accuracy) >= 1
+
+
+def test_tifl_drops_permanent_stragglers():
+    fl = _fl(rounds=4)
+    # group means put last group far beyond omega
+    net = WirelessNetwork(fl.n_clients, (1.0, 2.0, 3.0, 100.0),
+                          0.1, 0.0, (30, 60), fl.seed)
+    tr = FakeTrainer()
+    run_tifl(tr, net, fl)
+    dropped = set(range(15, 20))             # the 100s group
+    assert not (set(tr.trained) & dropped)
+
+
+def test_fedasync_clock_is_event_driven():
+    fl = _fl(rounds=3)
+    h = run_fedasync(FakeTrainer(), _net(fl), fl, eval_every=1)
+    assert all(b >= a for a, b in zip(h.times, h.times[1:]))

@@ -1,0 +1,60 @@
+"""CSTT (Alg. 4, Eqs. 3/4/7)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (cstt, move_tier, select_from_tier,
+                                  tier_timeouts)
+
+
+def test_move_tier_eq3():
+    assert move_tier(3, v_now=0.5, v_prev=0.4, n_tiers=5) == 2  # improved
+    assert move_tier(3, v_now=0.3, v_prev=0.4, n_tiers=5) == 4  # regressed
+    assert move_tier(1, 0.9, 0.1, 5) == 1                       # clamp low
+    assert move_tier(5, 0.1, 0.9, 5) == 5                       # clamp high
+
+
+def test_selection_favors_low_participation():
+    rng = np.random.default_rng(0)
+    ct = {0: 10, 1: 0, 2: 5, 3: 0, 4: 20}
+    picked = select_from_tier([0, 1, 2, 3, 4], ct, tau=2, rng=rng)
+    assert set(picked) == {1, 3}
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=30, unique=True),
+       st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_selection_size_and_membership(clients, tau):
+    rng = np.random.default_rng(1)
+    ct = {c: c % 7 for c in clients}
+    picked = select_from_tier(clients, ct, tau, rng)
+    assert len(picked) == min(tau, len(clients))
+    assert set(picked) <= set(clients)
+    if len(clients) > tau:
+        # max picked ct <= min unpicked ct (lowest-ct rule)
+        unpicked = set(clients) - set(picked)
+        assert max(ct[c] for c in picked) <= min(ct[c] for c in unpicked)
+
+
+def test_tier_timeouts_eq7():
+    tiers = [[0, 1], [2]]
+    at = {0: 4.0, 1: 6.0, 2: 100.0}
+    d = tier_timeouts(tiers, at, beta=1.2, omega=30.0)
+    assert d[0] == pytest.approx(5.0 * 1.2)
+    assert d[1] == 30.0                      # capped at omega
+
+
+def test_cstt_selects_from_all_tiers_up_to_t():
+    rng = np.random.default_rng(0)
+    tiers = [[0, 1, 2], [3, 4, 5], [6, 7, 8]]
+    at = {c: float(c + 1) for c in range(9)}
+    ct = {c: 0 for c in range(9)}
+    # accuracy regressed -> move 1 -> 2, select from tiers 1..2
+    sel, dmax, t = cstt(1, v_prev=0.5, v_now=0.4, tiers=tiers, at=at, ct=ct,
+                        tau=2, beta=1.2, omega=30.0, rng=rng)
+    assert t == 2
+    tiers_used = {k for _, k in sel}
+    assert tiers_used == {0, 1}
+    assert len(sel) == 4                     # tau from each tier
+    assert len(dmax) == 3

@@ -1,0 +1,56 @@
+"""Dynamic tiering (Alg. 3, Eqs. 1-2) — unit + hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiering import evaluate_client, tiering, update_avg_time
+from repro.fl.network import WirelessNetwork
+
+
+def test_tiering_sorted_and_partition():
+    at = {0: 5.0, 1: 1.0, 2: 3.0, 3: 9.0, 4: 2.0}
+    ts = tiering(at, m=2)
+    assert ts == [[1, 4], [2, 0], [3]]
+
+
+@given(st.dictionaries(st.integers(0, 200),
+                       st.floats(0.01, 1e4, allow_nan=False), min_size=1,
+                       max_size=60),
+       st.integers(1, 10))
+@settings(max_examples=100, deadline=None)
+def test_tiering_properties(at, m):
+    ts = tiering(at, m)
+    flat = [c for tier in ts for c in tier]
+    # exact partition of clients
+    assert sorted(flat) == sorted(at)
+    # tier widths: all m except possibly last
+    assert all(len(t) == m for t in ts[:-1])
+    assert 1 <= len(ts[-1]) <= m
+    # monotone: max at of tier k <= min at of tier k+1
+    for a, b in zip(ts[:-1], ts[1:]):
+        assert max(at[c] for c in a) <= min(at[c] for c in b)
+
+
+@given(st.floats(0.01, 1e3), st.integers(0, 10_000), st.floats(0.01, 1e3))
+@settings(max_examples=200, deadline=None)
+def test_update_avg_time_is_running_mean(at, ct, t_new):
+    # Eq. 2 == arithmetic mean over ct+1 samples when at is mean of ct
+    out = update_avg_time(at, ct, t_new)
+    expected = (at * ct + t_new) / (ct + 1)
+    assert out == pytest.approx(expected)
+    assert min(at, t_new) - 1e-9 <= out <= max(at, t_new) + 1e-9
+
+
+def test_evaluate_client_caps_wall_time_at_omega():
+    net = WirelessNetwork(4, (1000.0,), 0.1, 0.0, (30, 60), seed=1)
+    new_at, spent = evaluate_client(net, 0, rnd=0, kappa=3, omega=30.0)
+    assert new_at > 30.0            # true average is huge
+    assert spent == pytest.approx(90.0)  # but each attempt billed <= omega
+
+
+def test_evaluate_deterministic():
+    net = WirelessNetwork(4, (5.0, 10.0), 2.0, 0.3, (30, 60), seed=7)
+    a = evaluate_client(net, 2, rnd=5, kappa=2, omega=30.0)
+    b = evaluate_client(net, 2, rnd=5, kappa=2, omega=30.0)
+    assert a == b
