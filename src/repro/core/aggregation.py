@@ -1,34 +1,66 @@
 """Server-side model aggregation (Alg. 1 line 8 / Alg. 2 last line).
 
-``weighted_average`` stacks client updates and reduces with either plain
-jnp einsum or the fused Pallas fedagg kernel (TPU hot path; interpret
-mode on CPU).  ``staleness_merge`` is FedAsync's two-model blend.
+Two layers:
+
+* ``weighted_average_stacked`` — the engine hot path.  Takes a pytree
+  whose leaves already carry a leading client axis (N, ...) plus a
+  weight vector (N,), and reduces on device.  Zero-weight rows are
+  masked out (fused straggler masking), so dropped clients never force
+  a host-side re-pack of the buffer.  ``use_kernel=True`` routes
+  through the pytree-native Pallas fedagg path (single flattened
+  (N, P) kernel pass); otherwise a pure-jnp einsum-style reduction.
+* ``weighted_average`` — list-of-pytrees convenience wrapper kept for
+  the looped reference implementations and external callers; it stacks
+  then delegates.
+
+``staleness_merge`` is FedAsync's two-model blend.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+@jax.jit
+def _agg_jnp(stacked, w):
+    wn = w / jnp.maximum(w.sum(), 1e-30)
+
+    def agg(leaf):
+        wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        u = jnp.where(wb > 0.0, leaf.astype(jnp.float32), 0.0)
+        return jnp.sum(u * wb, axis=0).astype(leaf.dtype)
+    return jax.tree_util.tree_map(agg, stacked)
+
+
+def weighted_average_stacked(stacked, weights, *, use_kernel: bool = False,
+                             interpret: Optional[bool] = None):
+    """Reduce a stacked update pytree (leaves (N, ...)) with weights (N,).
+
+    sum_c w_c * u_c / sum(w).  Rows with w_c == 0 are masked to exactly
+    zero before the reduction (straggler masking); if every weight is
+    zero the result is an all-zeros pytree.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    if use_kernel:
+        from repro.kernels import fedagg_pytree
+        return fedagg_pytree(stacked, w, interpret=interpret)
+    return _agg_jnp(stacked, w)
+
+
 def weighted_average(param_list: Sequence, sizes: Sequence[float],
-                     use_kernel: bool = False):
-    """FedAvg: sum_c w_c * s_c / sum(s)."""
+                     use_kernel: bool = False,
+                     interpret: Optional[bool] = None):
+    """FedAvg: sum_c w_c * s_c / sum(s) over a list of update pytrees."""
     if len(param_list) == 0:
         raise ValueError("no client updates to aggregate")
     w = jnp.asarray(np.asarray(sizes, np.float32))
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *param_list)
-    if use_kernel:
-        from repro.kernels import fedagg_pytree
-        return fedagg_pytree(stacked, w)
-    wn = w / jnp.maximum(w.sum(), 1e-30)
-    def agg(leaf):
-        wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(leaf.astype(jnp.float32) * wb, axis=0).astype(leaf.dtype)
-    return jax.tree_util.tree_map(agg, stacked)
+    return weighted_average_stacked(stacked, w, use_kernel=use_kernel,
+                                    interpret=interpret)
 
 
 def staleness_merge(global_params, client_params, alpha_t: float):

@@ -7,8 +7,14 @@
   adaptive tier selection; round capped at Omega (slower uploads lost).
 * FedAsync [Xie'19]: fully asynchronous, staleness-weighted merge
   alpha_t = alpha * (t - tau_i + 1)^(-a); event-queue virtual clock.
+* FedProx [Li'20]: FedAvg + proximal blend toward the global model
+  (extra baseline beyond the paper).
 
-All three share the trainer + WirelessNetwork realization with FedDCT.
+All methods share the trainer + WirelessNetwork realization with FedDCT
+and run their per-round cohort through the batched execution engine
+(core/engine.py) — one vmapped device program per round instead of a
+per-client Python loop (pass ``engine="looped"`` for the reference
+path).
 """
 
 from __future__ import annotations
@@ -16,33 +22,33 @@ from __future__ import annotations
 import heapq
 from typing import Dict, List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import FLConfig
-from repro.core.aggregation import staleness_merge, weighted_average
+from repro.core.aggregation import staleness_merge
+from repro.core.engine import make_engine
 from repro.core.tiering import evaluate_client, tiering
 from repro.fl.metrics import RunHistory
 
 
-def run_fedavg(trainer, network, fl: FLConfig, *, verbose: bool = False,
+def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
+               engine: str = "batched", verbose: bool = False,
                eval_every: int = 1) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 11)
     hist = RunHistory(method="fedavg", arch=trainer.cfg.arch_id,
-                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac})
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                            "engine": engine})
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     for rnd in range(1, fl.rounds + 1):
-        sel = rng.choice(fl.n_clients, size=min(fl.tau, fl.n_clients),
-                         replace=False)
-        updates, sizes, times = [], [], []
-        for c in sel:
-            st = network.delay(int(c), rnd)
-            times.append(st)
-            new_p, s_c = trainer.local_train(params, int(c), rnd_seed=rnd)
-            updates.append(new_p)
-            sizes.append(s_c)
-        params = weighted_average(updates, sizes)
+        sel = [int(c) for c in rng.choice(fl.n_clients,
+                                          size=min(fl.tau, fl.n_clients),
+                                          replace=False)]
+        times = [network.delay(c, rnd) for c in sel]
+        params = eng.train_round(params, sel, rnd)
         clock += max(times)                      # waits for everyone
         if rnd % eval_every == 0:
             acc = trainer.evaluate(params)
@@ -55,11 +61,14 @@ def run_fedavg(trainer, network, fl: FLConfig, *, verbose: bool = False,
     return hist
 
 
-def run_tifl(trainer, network, fl: FLConfig, *, verbose: bool = False,
+def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
+             engine: str = "batched", verbose: bool = False,
              eval_every: int = 1) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 13)
     hist = RunHistory(method="tifl", arch=trainer.cfg.arch_id,
-                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac})
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                            "engine": engine})
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
     params = trainer.init_params(fl.seed)
     clock = 0.0
 
@@ -90,19 +99,17 @@ def run_tifl(trainer, network, fl: FLConfig, *, verbose: bool = False,
         k = int(rng.choice(live, p=p))
         credits[k] -= 1
         members = tiers[k]
-        sel = rng.choice(members, size=min(fl.tau, len(members)),
-                         replace=False)
-        updates, sizes, times = [], [], []
+        sel = [int(c) for c in rng.choice(members,
+                                          size=min(fl.tau, len(members)),
+                                          replace=False)]
+        times, survivors = [], []
         for c in sel:
-            st = network.delay(int(c), rnd)
+            st = network.delay(c, rnd)
             times.append(min(st, fl.omega))
             if st >= fl.omega:               # lost this round
                 continue
-            new_p, s_c = trainer.local_train(params, int(c), rnd_seed=rnd)
-            updates.append(new_p)
-            sizes.append(s_c)
-        if updates:
-            params = weighted_average(updates, sizes)
+            survivors.append(c)
+        params = eng.train_round(params, survivors, rnd)
         clock += max(times) if times else 0.0
         acc = trainer.evaluate(params) if rnd % eval_every == 0 else None
         if acc is not None:
@@ -112,7 +119,7 @@ def run_tifl(trainer, network, fl: FLConfig, *, verbose: bool = False,
             probs = inv / inv.sum() if inv.sum() > 0 else probs
             hist.record(time=clock, rnd=rnd, acc=acc, tier=k + 1,
                         n_selected=len(sel),
-                        n_stragglers=len(sel) - len(updates))
+                        n_stragglers=len(sel) - len(survivors))
             if verbose:
                 print(f"[tifl]   r={rnd:4d} t={clock:9.1f}s tier={k+1} "
                       f"acc={acc:.4f}")
@@ -121,11 +128,12 @@ def run_tifl(trainer, network, fl: FLConfig, *, verbose: bool = False,
     return hist
 
 
-def run_fedasync(trainer, network, fl: FLConfig, *, verbose: bool = False,
-                 eval_every: int = 5) -> RunHistory:
+def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
+                 verbose: bool = False, eval_every: int = 5) -> RunHistory:
     hist = RunHistory(method="fedasync", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "alpha": fl.async_alpha, "a": fl.async_a})
+    eng = make_engine(trainer, engine=engine)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     version = 0
@@ -141,8 +149,11 @@ def run_fedasync(trainer, network, fl: FLConfig, *, verbose: bool = False,
     for upd in range(1, max_updates + 1):
         finish, c, v0, ridx = heapq.heappop(heap)
         clock = finish
-        new_p, _ = trainer.local_train(snapshot[c], c,
-                                       rnd_seed=ridx * 977 + c)
+        # events are inherently sequential (each merge precedes the next
+        # event), so the engine runs a cohort of one — still the shared
+        # jitted scan path, just not vmapped across clients.
+        stacked, _ = eng.train_clients(snapshot[c], [c], ridx * 977 + c)
+        new_p = jax.tree_util.tree_map(lambda l: l[0], stacked)
         staleness = version - v0
         if fl.async_staleness == "poly":
             alpha_t = fl.async_alpha * (staleness + 1.0) ** (-fl.async_a)
@@ -172,6 +183,7 @@ def run_method(method: str, trainer, network, fl: FLConfig, **kw
 
 
 def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
+                use_kernel_agg: bool = False, engine: str = "batched",
                 verbose: bool = False, eval_every: int = 1) -> RunHistory:
     """FedProx [Li et al. 2020]: FedAvg + proximal term pulling local
     models toward the global model (extra baseline beyond the paper).
@@ -179,30 +191,29 @@ def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
     Implemented generically: after local training, each update is blended
     toward the global params by 1/(1+prox_mu_eff) — the closed form of
     the proximal step for quadratic regularization applied post-hoc,
-    which keeps the trainer interface unchanged.
+    which keeps the trainer interface unchanged.  The blend runs on the
+    STACKED cohort (broadcast over the client axis), so the whole round
+    stays a device program.
     """
-    import jax
     rng = np.random.default_rng(fl.seed + 17)
     hist = RunHistory(method="fedprox", arch=trainer.cfg.arch_id,
-                      meta={"mu": fl.mu, "prox_mu": prox_mu})
+                      meta={"mu": fl.mu, "prox_mu": prox_mu,
+                            "engine": engine})
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     blend = 1.0 / (1.0 + prox_mu * 10)
     for rnd in range(1, fl.rounds + 1):
-        sel = rng.choice(fl.n_clients, size=min(fl.tau, fl.n_clients),
-                         replace=False)
-        updates, sizes, times = [], [], []
-        for c in sel:
-            st = network.delay(int(c), rnd)
-            times.append(st)
-            new_p, s_c = trainer.local_train(params, int(c), rnd_seed=rnd)
-            prox_p = jax.tree_util.tree_map(
-                lambda n, g: (blend * n.astype(jnp.float32)
-                              + (1 - blend) * g.astype(jnp.float32)
-                              ).astype(n.dtype), new_p, params)
-            updates.append(prox_p)
-            sizes.append(s_c)
-        params = weighted_average(updates, sizes)
+        sel = [int(c) for c in rng.choice(fl.n_clients,
+                                          size=min(fl.tau, fl.n_clients),
+                                          replace=False)]
+        times = [network.delay(c, rnd) for c in sel]
+        stacked, sizes = eng.train_clients(params, sel, rnd)
+        prox = jax.tree_util.tree_map(
+            lambda n, g: (blend * n.astype(jnp.float32)
+                          + (1 - blend) * g.astype(jnp.float32)[None]
+                          ).astype(n.dtype), stacked, params)
+        params = eng.aggregate(prox, sizes)
         clock += max(times)
         if rnd % eval_every == 0:
             acc = trainer.evaluate(params)

@@ -10,8 +10,13 @@ Round flow:
      wireless model.  A client whose time st >= D_max of its tier is a
      straggler: its update is dropped and it enters the parallel
      re-evaluation lane for kappa rounds (Alg. 2 "Async:" line).
-  4. Aggregate survivors weighted by sample count; clock advances by
-     Eq. 5/6: D = max over used tiers of min(max(st in tier), D_max^t, Ω).
+     Survivors train as ONE batched vmapped step via the execution
+     engine (core/engine.py) — virtual stragglers are known before
+     training, so the cohort is trimmed first and the whole round is a
+     single device program.
+  4. Aggregate survivors weighted by sample count, on device; clock
+     advances by Eq. 5/6: D = max over used tiers of
+     min(max(st in tier), D_max^t, Ω).
   5. Clients whose evaluation lane finished (virtual time passed) rejoin
      with their refreshed average time.
 """
@@ -23,20 +28,22 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.config.base import FLConfig
-from repro.core.aggregation import weighted_average
+from repro.core.engine import make_engine
 from repro.core.selection import cstt
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
 
 
 def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
-               verbose: bool = False, eval_every: int = 1) -> RunHistory:
+               engine: str = "batched", verbose: bool = False,
+               eval_every: int = 1) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 7)
     hist = RunHistory(method="feddct", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
                             "omega": fl.omega, "tau": fl.tau,
-                            "n_tiers": fl.n_tiers})
+                            "n_tiers": fl.n_tiers, "engine": engine})
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
     params = trainer.init_params(fl.seed)
     clock = 0.0
 
@@ -76,7 +83,9 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
             t_ptr, v_prev, v_curr, tiers, avail_at, ct, fl.tau, fl.beta,
             fl.omega, rng)
 
-        updates, sizes, times_per_tier = [], [], {}
+        # ---- virtual delays decide survivors BEFORE any training ------
+        survivors: List[int] = []
+        times_per_tier: Dict[int, List[float]] = {}
         n_straggle = 0
         for c, k in selected:
             st = network.delay(c, rnd)
@@ -88,15 +97,12 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                                                 fl.omega)
                 eval_lane[c] = (clock + spent, new_at)
                 continue
-            new_p, s_c = trainer.local_train(params, c, rnd_seed=rnd)
-            updates.append(new_p)
-            sizes.append(s_c)
+            survivors.append(c)
             at[c] = update_avg_time(at[c], ct[c], st)
             ct[c] += 1
 
-        if updates:
-            params = weighted_average(updates, sizes,
-                                      use_kernel=use_kernel_agg)
+        # ---- one batched device program for the whole cohort ----------
+        params = eng.train_round(params, survivors, rnd)
 
         # Eq. 5/6 round duration
         d_round = 0.0

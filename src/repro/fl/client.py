@@ -45,12 +45,14 @@ class CNNTrainer:
         self.x_test = jnp.asarray(data["x_test"])
         self.y_test = jnp.asarray(data["y_test"])
         self.opt = make_optimizer(fl.optimizer)
-        self._step = jax.jit(self._step_impl)
+        self._step = jax.jit(self._step_impl, static_argnames=("im2col",))
         self._eval = jax.jit(self._eval_impl)
+        self._batch_train = jax.jit(self._batch_train_impl)
 
-    def _step_impl(self, params, opt_state, x, y):
+    def _step_impl(self, params, opt_state, x, y, im2col: bool = False):
         loss, grads = jax.value_and_grad(
-            lambda p: cnn_loss(self.cfg, p, {"x": x, "y": y}))(params)
+            lambda p: cnn_loss(self.cfg, p, {"x": x, "y": y},
+                               im2col=im2col))(params)
         ups, opt_state = self.opt.update(grads, opt_state, params, self.fl.lr)
         params = jax.tree_util.tree_map(
             lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
@@ -73,6 +75,71 @@ class CNNTrainer:
                 params, opt_state, _ = self._step(
                     params, opt_state, jnp.asarray(x), jnp.asarray(y))
         return params, len(ds)
+
+    # -- batched multi-client path (engine hot path) --------------------
+    def _client_epoch_batches(self, client_id: int, rnd_seed: int):
+        """All local-training batches for one client, identical stream to
+        the looped ``local_train`` (same seeds, same order)."""
+        ds = self.clients[client_id]
+        xs, ys = [], []
+        for ep in range(self.fl.local_epochs):
+            for x, y in client_batches(ds, self.fl.batch_size,
+                                       rnd_seed * 131 + ep):
+                xs.append(x)
+                ys.append(y)
+        return np.stack(xs), np.stack(ys)          # (T, B, ...), (T, B)
+
+    def _batch_train_impl(self, params, xs, ys):
+        """xs (C, T, B, H, W, ch), ys (C, T, B) -> stacked params (C, ...).
+
+        vmap over the client axis of a lax.scan over local steps: the
+        whole multi-client round is ONE compiled XLA program instead of
+        C * T eager dispatches.
+        """
+        def one_client(x_seq, y_seq):
+            opt_state = self.opt.init(params)
+            def step(carry, xy):
+                p, o = carry
+                # im2col keeps per-client conv kernels on the GEMM fast
+                # path under the client-axis vmap
+                p, o, loss = self._step_impl(p, o, xy[0], xy[1],
+                                             im2col=True)
+                return (p, o), loss
+            (p, _), _ = jax.lax.scan(step, (params, opt_state),
+                                     (x_seq, y_seq))
+            return p
+        return jax.vmap(one_client)(xs, ys)
+
+    def local_train_batch(self, params, client_ids, rnd_seed: int):
+        """Train many clients in one jitted vmapped scan.
+
+        Clients whose local batch streams have differing shapes (ragged
+        partitions) are bucketed by shape; each bucket is one compiled
+        call.  Returns (stacked_params with leading axis len(client_ids)
+        in input order, sizes array).
+        """
+        sizes = np.asarray([len(self.clients[c]) for c in client_ids],
+                           np.float32)
+        buckets: Dict[tuple, List[int]] = {}
+        data = {}                     # per client id: pad slots repeat
+        for pos, c in enumerate(client_ids):
+            if c not in data:         # ids so compute each stream once
+                data[c] = self._client_epoch_batches(c, rnd_seed)
+            buckets.setdefault(data[c][0].shape, []).append(pos)
+        chunks, order = [], []
+        for shape, positions in buckets.items():
+            xs = jnp.asarray(np.stack(
+                [data[client_ids[p]][0] for p in positions]))
+            ys = jnp.asarray(np.stack(
+                [data[client_ids[p]][1] for p in positions]))
+            chunks.append(self._batch_train(params, xs, ys))
+            order.extend(positions)
+        if len(chunks) == 1:          # common case: one shape bucket,
+            return chunks[0], sizes   # order already the input order
+        inv = np.argsort(np.asarray(order))
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0)[inv], *chunks)
+        return stacked, sizes
 
     def evaluate(self, params, max_samples: int = 2048) -> float:
         n = min(max_samples, self.x_test.shape[0])
@@ -98,9 +165,11 @@ class LMTrainer:
         self.client_toks = splits
         self.test_toks = toks[-corpus_tokens // 10:]
         self.opt = make_optimizer(fl.optimizer)
+        self._custom_step = step_fn is not None
         self._step = step_fn or jax.jit(self._step_impl)
         self._init_fn = init_fn
         self._eval = jax.jit(self._eval_impl)
+        self._batch_train = jax.jit(self._batch_train_impl)
 
     def _step_impl(self, params, opt_state, tokens):
         def loss_fn(p):
@@ -136,6 +205,33 @@ class LMTrainer:
             b = jnp.asarray(self._batch(toks, rnd_seed * 131 + ep))
             params, opt_state, _ = self._step(params, opt_state, b)
         return params, len(toks)
+
+    def _batch_train_impl(self, params, tokens):
+        """tokens (C, E, B, S) -> stacked params (C, ...)."""
+        def one_client(tok_seq):
+            opt_state = self.opt.init(params)
+            def step(carry, tok):
+                p, o = carry
+                p, o, loss = self._step_impl(p, o, tok)
+                return (p, o), loss
+            (p, _), _ = jax.lax.scan(step, (params, opt_state), tok_seq)
+            return p
+        return jax.vmap(one_client)(tokens)
+
+    def local_train_batch(self, params, client_ids, rnd_seed: int):
+        """One jitted vmapped scan over all clients' local epochs; batch
+        streams are identical to the looped ``local_train``."""
+        if self._custom_step:
+            raise NotImplementedError(
+                "custom step_fn (pjit) trainers use the looped path")
+        toks = np.stack([
+            np.stack([self._batch(self.client_toks[c], rnd_seed * 131 + ep)
+                      for ep in range(self.fl.local_epochs)])
+            for c in client_ids])                   # (C, E, B, S)
+        stacked = self._batch_train(params, jnp.asarray(toks))
+        sizes = np.asarray([len(self.client_toks[c]) for c in client_ids],
+                           np.float32)
+        return stacked, sizes
 
     def evaluate(self, params) -> float:
         b = jnp.asarray(self._batch(self.test_toks, 1234))

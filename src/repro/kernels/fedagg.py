@@ -3,7 +3,11 @@
 The FedDCT server's hot loop: w_global = sum_c (s_c / sum s) * w_c over
 the stacked client updates (N_clients, P).  One pass over HBM, f32
 accumulation in VMEM, parameter axis tiled so each (N, bp) panel fits
-VMEM regardless of model size.  Weight normalization is fused.
+VMEM regardless of model size.  Weight normalization AND straggler
+masking are fused: a zero-weight row (a dropped/straggling client) is
+zeroed inside the kernel before the reduction, so non-finite garbage in
+masked rows can never poison the average and the scheduler never has to
+re-pack the stacked buffer after a drop.
 """
 
 from __future__ import annotations
@@ -15,10 +19,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _kernel(u_ref, w_ref, o_ref):
     u = u_ref[...].astype(jnp.float32)          # (N, bp)
     w = w_ref[...].astype(jnp.float32)          # (N,)
+    # fused straggler mask: zero-weight clients contribute exactly 0,
+    # even if their update row is inf/nan (never trained).
+    u = jnp.where((w > 0.0)[:, None], u, 0.0)
     w = w / jnp.maximum(w.sum(), 1e-30)
     o_ref[...] = (w @ u).astype(o_ref.dtype)    # (bp,)
 
@@ -26,7 +37,11 @@ def _kernel(u_ref, w_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
 def fedagg(updates, weights, *, block_p: int = 16384,
            interpret: bool = False):
-    """updates (N,P), weights (N,) -> weighted average (P,)."""
+    """updates (N,P), weights (N,) -> weighted average (P,).
+
+    Zero-weight rows are masked out (see module docstring); if every
+    weight is zero the result is all-zeros.
+    """
     n, p = updates.shape
     bp = min(block_p, p)
     pad = (-p) % bp
@@ -43,7 +58,7 @@ def fedagg(updates, weights, *, block_p: int = 16384,
         ],
         out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((np_,), updates.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(updates, weights)

@@ -3,12 +3,21 @@
 On CPU (this container) the kernels execute with ``interpret=True``;
 on TPU they compile natively.  ``gqa_flash_attention`` adapts the model
 zoo's (B,S,H,D)/(B,T,Hkv,D) layout to the kernel's folded-head layout.
+
+``fedagg_pytree`` is the pytree-native server aggregation hot path: the
+stacked client-update pytree is flattened ONCE into a single (N, P)
+f32 buffer (unflatten spec cached per tree structure), reduced by the
+fused fedagg kernel in one pass, and split back — instead of one kernel
+launch per leaf.
 """
 
 from __future__ import annotations
 
+from typing import Dict, List, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.fedagg import fedagg
 from repro.kernels.flash_attention import flash_attention
@@ -47,11 +56,59 @@ def fedagg_op(updates, weights, *, block_p=16384, interpret=None):
     return fedagg(updates, weights, block_p=block_p, interpret=interpret)
 
 
-def fedagg_pytree(stacked_updates, weights, *, interpret=None):
-    """Weighted-average a pytree whose leaves are stacked (N, ...)."""
-    def agg(leaf):
-        n = leaf.shape[0]
-        flat = leaf.reshape(n, -1)
-        return fedagg_op(flat, weights, interpret=interpret).reshape(
-            leaf.shape[1:])
-    return jax.tree_util.tree_map(agg, stacked_updates)
+# ---------------------------------------------------------------------------
+# Pytree-native aggregation: flatten once, one kernel pass, cached spec
+# ---------------------------------------------------------------------------
+
+# treedef + leaf (shape, dtype) signature -> list of (offset, size, shape,
+# dtype) describing how to slice the flat (P,) result back into leaves.
+_UNFLATTEN_SPECS: Dict[tuple, List[Tuple[int, int, tuple, object]]] = {}
+
+
+def _unflatten_spec(treedef, leaves):
+    key = (treedef, tuple((l.shape, str(l.dtype)) for l in leaves))
+    spec = _UNFLATTEN_SPECS.get(key)
+    if spec is None:
+        spec, off = [], 0
+        for l in leaves:
+            size = int(np.prod(l.shape[1:], dtype=np.int64)) if l.ndim > 1 \
+                else 1
+            spec.append((off, size, l.shape[1:], l.dtype))
+            off += size
+        _UNFLATTEN_SPECS[key] = spec
+    return spec
+
+
+def flatten_updates(stacked):
+    """Stacked pytree (leaves (N, ...)) -> ((N, P) f32 buffer, treedef,
+    unflatten spec).  The spec is cached per (structure, shapes, dtypes)
+    so repeated rounds pay only for the concat itself."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    if not leaves:
+        raise ValueError("empty pytree: nothing to aggregate")
+    spec = _unflatten_spec(treedef, leaves)
+    n = leaves[0].shape[0]
+    buf = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+    return buf, treedef, spec
+
+
+def unflatten_result(flat, treedef, spec):
+    """(P,) flat aggregate -> pytree with per-leaf shapes/dtypes restored."""
+    outs = [flat[off:off + size].reshape(shape).astype(dtype)
+            for off, size, shape, dtype in spec]
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def fedagg_pytree(stacked_updates, weights, *, block_p=16384,
+                  interpret=None):
+    """Weighted-average a pytree whose leaves are stacked (N, ...).
+
+    Zero-weight rows (masked stragglers) contribute exactly nothing —
+    the mask is fused into the kernel, so callers can keep dropped
+    clients in the stacked buffer instead of re-packing it.
+    """
+    interpret = on_cpu() if interpret is None else interpret
+    buf, treedef, spec = flatten_updates(stacked_updates)
+    flat = fedagg(buf, weights, block_p=block_p, interpret=interpret)
+    return unflatten_result(flat, treedef, spec)

@@ -52,8 +52,12 @@ def ssm_scan_ref(x, dt, b_in, c_out, a_log):
 
 
 def fedagg_ref(updates, weights):
-    """updates (N,P), weights (N,) -> (P,) weighted average (f32 accum)."""
+    """updates (N,P), weights (N,) -> (P,) weighted average (f32 accum).
+
+    Mirrors the kernel's fused straggler mask: zero-weight rows are
+    zeroed before the reduction so non-finite garbage cannot leak in.
+    """
     w = weights.astype(jnp.float32)
+    u = jnp.where((w > 0.0)[:, None], updates.astype(jnp.float32), 0.0)
     w = w / jnp.maximum(w.sum(), 1e-30)
-    return jnp.einsum("np,n->p", updates.astype(jnp.float32),
-                      w).astype(updates.dtype)
+    return jnp.einsum("np,n->p", u, w).astype(updates.dtype)

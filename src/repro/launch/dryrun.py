@@ -127,6 +127,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "alias_bytes_per_device": int(mem.alias_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # older jax: one dict per device
+        ca = ca[0] if ca else {}
     rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
                        "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
 

@@ -25,7 +25,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--method", default="feddct",
-                    choices=["feddct", "fedavg", "tifl", "fedasync"])
+                    choices=["feddct", "fedavg", "tifl", "fedasync",
+                             "fedprox"])
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--tiers", type=int, default=5)
@@ -33,6 +34,12 @@ def main(argv=None):
     ap.add_argument("--mu", type=float, default=0.0)
     ap.add_argument("--primary-frac", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "looped"],
+                    help="batched = vmapped multi-client engine; "
+                         "looped = per-client reference path")
+    ap.add_argument("--kernel-agg", action="store_true",
+                    help="aggregate through the Pallas fedagg pytree path")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -43,10 +50,17 @@ def main(argv=None):
     net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
                           fl.mu, fl.failure_delay, fl.seed)
     trainer = build_fl_clients(args.arch, fl)
-    hist = run_method(args.method, trainer, net, fl, verbose=True)
-    print(f"[fl_train] {args.method} on {args.arch}: "
-          f"final acc={hist.accuracy[-1]:.4f} "
-          f"virtual time={hist.times[-1]:.1f}s")
+    kw = dict(verbose=True, engine=args.engine)
+    if args.method != "fedasync":
+        kw["use_kernel_agg"] = args.kernel_agg
+    hist = run_method(args.method, trainer, net, fl, **kw)
+    if hist.accuracy:
+        print(f"[fl_train] {args.method} on {args.arch}: "
+              f"final acc={hist.accuracy[-1]:.4f} "
+              f"virtual time={hist.times[-1]:.1f}s")
+    else:
+        print(f"[fl_train] {args.method} on {args.arch}: finished before "
+              f"the first evaluation (fewer updates than eval_every)")
     if args.out:
         hist.save(args.out)
         print(f"[fl_train] history -> {args.out}")

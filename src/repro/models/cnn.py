@@ -28,9 +28,43 @@ def _conv(x, w, stride=1):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
+def _conv_im2col(x, w, stride=1):
+    """Convolution as patch-extraction + GEMM.
+
+    Under a client-axis vmap (the batched FL engine), per-client kernels
+    turn ``_conv`` into a grouped convolution — a slow path on CPU.
+    Patch extraction has no weights, so vmap folds it into the batch and
+    the weighted contraction becomes a batched GEMM, which is an order
+    of magnitude faster on the gradient path.  For stride 1 / odd k the
+    patches come from shifted slices of the padded input, whose gradient
+    is pure pad-and-add (no scatter, another ~5x on the backward pass).
+    """
+    k, cin, cout = w.shape[0], w.shape[2], w.shape[3]
+    if stride != 1 or k % 2 == 0:
+        # general case (strided resnet stages) via the patches op;
+        # feature axis ordered (cin, kh, kw)
+        p = jax.lax.conv_general_dilated_patches(
+            x, (k, k), (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        wr = jnp.moveaxis(w, 2, 0).reshape(cin * k * k, cout)
+        return p @ wr
+    b, h, wd, _ = x.shape
+    r = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (r, r), (r, r), (0, 0)))
+    sl = [xp[:, i:i + h, j:j + wd, :] for i in range(k) for j in range(k)]
+    p = jnp.concatenate(sl, axis=-1)     # features ordered (kh, kw, cin)
+    return p @ w.reshape(k * k * cin, cout)
+
+
 def _pool(x):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:       # odd spatial dims: generic windowed reduce
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    # 2x2/2 max-pool as reshape+max: identical result, but its gradient
+    # avoids XLA's SelectAndScatter (an order of magnitude slower on
+    # CPU, and worse under the FL engine's client-axis vmap)
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
 def init_cnn(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
@@ -87,22 +121,28 @@ def _norm_act(x, scale):
     return jax.nn.relu((x - mu) * jax.lax.rsqrt(var + 1e-5) * scale)
 
 
-def cnn_forward(cfg: ModelConfig, params, images):
-    """images (B,H,W,C) -> logits (B,n_classes)."""
+def cnn_forward(cfg: ModelConfig, params, images, *, im2col: bool = False):
+    """images (B,H,W,C) -> logits (B,n_classes).
+
+    ``im2col=True`` computes every convolution as patches + GEMM — same
+    math (to float tolerance), but vmap-friendly; the batched FL engine
+    sets it so per-client kernels stay on the fast GEMM path.
+    """
+    conv = _conv_im2col if im2col else _conv
     x = images
     if cfg.resnet:
-        x = _conv(x, params["stem"])
+        x = conv(x, params["stem"])
         for i, blk in enumerate(params["blocks"]):
             stride = 1 if i == 0 else 2
-            h = _conv(x, blk["conv1"], stride)
+            h = conv(x, blk["conv1"], stride)
             h = _norm_act(h, blk["scale1"])
-            h = _conv(h, blk["conv2"])
-            sc = x if "proj" not in blk else _conv(x, blk["proj"], stride)
+            h = conv(h, blk["conv2"])
+            sc = x if "proj" not in blk else conv(x, blk["proj"], stride)
             x = _norm_act(h + sc, blk["scale2"])
         x = x.mean(axis=(1, 2))
         return x @ params["fc"]["w"] + params["fc"]["b"]
     for cv in params["convs"]:
-        x = jax.nn.relu(_conv(x, cv["w"]) + cv["b"])
+        x = jax.nn.relu(conv(x, cv["w"]) + cv["b"])
         x = _pool(x)
     x = x.reshape(x.shape[0], -1)
     for i, fc in enumerate(params["fcs"]):
@@ -112,8 +152,9 @@ def cnn_forward(cfg: ModelConfig, params, images):
     return x
 
 
-def cnn_loss(cfg: ModelConfig, params, batch):
-    logits = cnn_forward(cfg, params, batch["x"]).astype(jnp.float32)
+def cnn_loss(cfg: ModelConfig, params, batch, *, im2col: bool = False):
+    logits = cnn_forward(cfg, params, batch["x"],
+                         im2col=im2col).astype(jnp.float32)
     labels = batch["y"]
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]

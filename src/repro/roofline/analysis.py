@@ -109,14 +109,32 @@ def _instr_defs(lines: List[str]) -> Dict[str, str]:
     return defs
 
 
+def _operand_names(operand_str: str) -> List[str]:
+    """Operand instruction names, robust to typed operands — newer HLO
+    prints ``dot(f32[8,32]{1,0} %lhs, ...)`` (commas inside the type
+    make naive splitting wrong)."""
+    return re.findall(r"%([\w.\-]+)", operand_str)
+
+
+def _operand_dims(operand_str: str, idx: int, defs: Dict[str, str]
+                  ) -> List[int]:
+    names = _operand_names(operand_str)
+    if idx < len(names) and names[idx] in defs:
+        return _shape_dims(defs[names[idx]])
+    # fall back to the inline type annotation of the idx-th operand
+    typed = re.findall(r"(\w+\[[\d,]*\])", operand_str)
+    if idx < len(typed):
+        return _shape_dims(typed[idx])
+    return []
+
+
 def _dot_flops(ln: str, defs: Dict[str, str]) -> float:
     out_m = re.match(r"(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\S+)\s+dot\(", ln)
     if not out_m:
         return 0.0
     out_elems = _shape_elems(out_m.group(1))
-    ops = re.search(r"dot\(([^)]*)\)", ln)
-    lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
-    lhs_dims = _shape_dims(defs.get(lhs_name, ""))
+    ops = re.search(r"dot\((.*)\)", ln)
+    lhs_dims = _operand_dims(ops.group(1), 0, defs)
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
     contraction = 1
     if cd and lhs_dims:
@@ -131,9 +149,8 @@ def _conv_flops(ln: str, defs: Dict[str, str]) -> float:
     if not out_m:
         return 0.0
     out_elems = _shape_elems(out_m.group(1))
-    ops = re.search(r"convolution\(([^)]*)\)", ln)
-    rhs_name = ops.group(1).split(",")[1].strip().lstrip("%")
-    k_dims = _shape_dims(defs.get(rhs_name, ""))
+    ops = re.search(r"convolution\((.*)\)", ln)
+    k_dims = _operand_dims(ops.group(1), 1, defs)
     if not k_dims:
         return 0.0
     k = 1
@@ -173,17 +190,21 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
             if mcoll:
                 out_b = _shape_bytes(mcoll.group(1))
                 in_b = 0
-                for op in mcoll.group(3).split(","):
-                    in_b += _shape_bytes(defs.get(op.strip().lstrip("%"), ""))
+                for op in _operand_names(mcoll.group(3)):
+                    in_b += _shape_bytes(defs.get(op, ""))
                 kind = mcoll.group(2)
                 cc.coll_bytes[kind] = cc.coll_bytes.get(kind, 0.0) + float(
                     max(out_b, in_b))
+            # while operand may carry an inline tuple-type annotation
             mwhile = re.search(
-                r"while\(%[\w.\-]+\), condition=%([\w.\-]+), "
-                r"body=%([\w.\-]+)", ln)
+                r"while\((?:\([^)]*\)\s*)?%[\w.\-]+\), condition=%([\w.\-]+),"
+                r" body=%([\w.\-]+)", ln)
             if mwhile:
                 cond, body = mwhile.group(1), mwhile.group(2)
-                trips = _trip_count(comps.get(cond, []))
+                mknown = re.search(
+                    r"known_trip_count\D*\"n\":\"(\d+)\"", ln)
+                trips = int(mknown.group(1)) if mknown else _trip_count(
+                    comps.get(cond, []))
                 cc.calls.append((body, float(trips)))
             for mcall in re.finditer(r"calls=%([\w.\-]+)", ln):
                 cc.calls.append((mcall.group(1), 1.0))

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import (banded_attention, chunked_attention,
                                     decode_attention, init_kv_cache,
@@ -22,7 +21,11 @@ def _qkv(b, s, h, d, t=None):
             jax.random.normal(ks[2], (b, t, h, d), jnp.float32))
 
 
-@pytest.mark.parametrize("cq,ckv", [(64, 64), (128, 256), (256, 128)])
+@pytest.mark.parametrize("cq,ckv", [
+    (64, 64),
+    pytest.param(128, 256, marks=pytest.mark.slow),
+    pytest.param(256, 128, marks=pytest.mark.slow),
+])
 def test_chunked_matches_naive_causal(cq, ckv):
     q, k, v = _qkv(2, 512, 4, 32)
     a = chunked_attention(q, k, v, causal=True, chunk_q=cq, chunk_kv=ckv)
@@ -48,10 +51,13 @@ def test_banded_matches_naive_window(window):
                                atol=2e-5)
 
 
-@given(st.integers(1, 3).map(lambda i: 2 ** i),      # heads
-       st.sampled_from([128, 256]),                  # seq
-       st.sampled_from([16, 32]))                    # head dim
-@settings(max_examples=12, deadline=None)
+@pytest.mark.parametrize("h,s,d", [
+    (2, 128, 16), (4, 256, 16),
+    pytest.param(2, 256, 32, marks=pytest.mark.slow),
+    pytest.param(4, 128, 32, marks=pytest.mark.slow),
+    pytest.param(8, 128, 32, marks=pytest.mark.slow),
+    pytest.param(8, 256, 16, marks=pytest.mark.slow),
+])
 def test_chunked_property(h, s, d):
     q, k, v = _qkv(1, s, h, d)
     a = chunked_attention(q, k, v, causal=True, chunk_q=64, chunk_kv=64)
@@ -87,6 +93,7 @@ def test_decode_ring_cache_matches_full_attention():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_decode_ring_cache_window_eviction():
     """With window W and cache size W, old entries are overwritten and the
     result equals windowed attention over the full history."""

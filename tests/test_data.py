@@ -1,8 +1,7 @@
-"""Data pipeline: synthetic sets, partitioners (hypothesis), batching."""
+"""Data pipeline: synthetic sets, partitioners (seeded sweeps), batching."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data import (client_batches, dirichlet_partition, iid_partition,
                         make_image_dataset, make_token_dataset,
@@ -30,8 +29,10 @@ def test_classes_are_separable_by_prototype_distance():
     assert np.median(between[np.triu_indices(10, 1)]) > 1.0
 
 
-@given(st.integers(2, 30), st.floats(0.15, 0.95))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("n_clients,frac", [
+    (2, 0.15), (2, 0.95), (3, 0.5), (5, 0.7), (8, 0.33), (10, 0.9),
+    (13, 0.15), (17, 0.62), (24, 0.8), (30, 0.95), (30, 0.15), (7, 0.45),
+])
 def test_primary_partition_properties(n_clients, frac):
     labels = np.random.default_rng(0).integers(0, 10, 3000).astype(np.int64)
     parts = primary_class_partition(labels, n_clients, frac, seed=1)

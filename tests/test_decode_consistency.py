@@ -12,6 +12,8 @@ import pytest
 from repro.config import get_arch
 from repro.models import decode_step, forward, init_decode_state, init_model
 
+pytestmark = pytest.mark.slow  # full-model decode loops, ~10 s each
+
 B, S = 2, 16
 KEY = jax.random.PRNGKey(1)
 

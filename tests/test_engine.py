@@ -1,0 +1,199 @@
+"""Batched execution engine: equivalence vs the looped reference path,
+fused-aggregation parity, and cohort edge cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.config.base import FLConfig
+from repro.core.baselines import run_fedavg
+from repro.core.engine import BatchedClientEngine, make_engine
+from repro.core.scheduler import run_feddct
+from repro.fl.client import CNNTrainer
+from repro.fl.network import WirelessNetwork
+from repro.kernels import fedagg_op, fedagg_pytree
+from repro.kernels.ref import fedagg_ref
+
+
+_TRAINER_CACHE = {}
+
+
+def _setup(mu=0.0, rounds=3, n_clients=8, seed=0, lr=0.003):
+    fl = FLConfig(n_clients=n_clients, n_tiers=4, tau=2, rounds=rounds,
+                  mu=mu, primary_frac=0.7, seed=seed, lr=lr)
+    net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                          fl.mu, fl.failure_delay, fl.seed)
+    # reduced CNN: same code paths, a fraction of the compile/step cost.
+    # Trainers are stateless across runs (init_params re-seeds), so one
+    # instance (and its warm jit caches) is shared across tests.
+    key = (n_clients, seed, lr)
+    if key not in _TRAINER_CACHE:
+        _TRAINER_CACHE[key] = CNNTrainer(get_arch("cnn-mnist").reduced(),
+                                         fl, "mnist", scale=0.01)
+    return _TRAINER_CACHE[key], net, fl
+
+
+class FakeTrainer:
+    """Loop-only trainer (no local_train_batch): exercises the engine's
+    transparent fallback."""
+
+    class cfg:
+        arch_id = "fake"
+
+    def init_params(self, seed=0):
+        return {"w": jnp.zeros(4, jnp.float32)}
+
+    def local_train(self, params, client_id, rnd_seed):
+        return {"w": params["w"] + 1.0 + client_id}, 10 + client_id
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics
+# ---------------------------------------------------------------------------
+
+def test_engine_empty_cohort_returns_params_unchanged():
+    eng = BatchedClientEngine(FakeTrainer())
+    p = {"w": jnp.ones(4)}
+    out = eng.train_round(p, [], rnd_seed=1)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(p["w"]))
+
+
+def test_engine_all_masked_cohort_returns_params_unchanged():
+    eng = BatchedClientEngine(FakeTrainer())
+    p = {"w": jnp.ones(4)}
+    out = eng.train_round(p, [0, 1], rnd_seed=1, weights=[0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(p["w"]))
+
+
+def test_engine_fallback_matches_manual_weighted_average():
+    eng = BatchedClientEngine(FakeTrainer())
+    p = {"w": jnp.zeros(4)}
+    out = eng.train_round(p, [1, 3], rnd_seed=0)
+    # updates: 2+... w=11: 1+1+... client 1 -> 2.0, client 3 -> 4.0
+    expect = (2.0 * 11 + 4.0 * 13) / 24
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full(4, expect, np.float32), rtol=1e-6)
+
+
+def test_engine_zero_weight_client_is_excluded():
+    eng = BatchedClientEngine(FakeTrainer())
+    p = {"w": jnp.zeros(4)}
+    out = eng.train_round(p, [1, 3], rnd_seed=0, weights=[11.0, 0.0])
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full(4, 2.0, np.float32), rtol=1e-6)
+
+
+def test_make_engine_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        make_engine(FakeTrainer(), engine="warp")
+
+
+def test_cohort_padding_is_invisible():
+    """Padded slots (power-of-two rounding) are sliced off: a cohort of
+    3 runs as 4 on device but returns exactly a 3-row stack."""
+    tr, _, fl = _setup()
+    eng = make_engine(tr, engine="batched")
+    params = tr.init_params(0)
+    stacked, sizes = eng.train_clients(params, [0, 1, 2], 1)
+    lead = {l.shape[0] for l in jax.tree_util.tree_leaves(stacked)}
+    assert lead == {3}
+    assert sizes.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# batched == looped equivalence (RunHistory trajectories)
+# ---------------------------------------------------------------------------
+
+def _assert_histories_close(ha, hb, acc_tol=5e-3):
+    assert ha.rounds == hb.rounds
+    np.testing.assert_allclose(ha.times, hb.times, rtol=1e-9)
+    assert ha.tier == hb.tier
+    assert ha.n_selected == hb.n_selected
+    assert ha.n_stragglers == hb.n_stragglers
+    np.testing.assert_allclose(ha.accuracy, hb.accuracy, atol=acc_tol)
+
+
+def test_feddct_batched_matches_looped_history():
+    tr, net, fl = _setup(mu=0.2)
+    hb = run_feddct(tr, net, fl, engine="batched")
+    tr2, net2, fl2 = _setup(mu=0.2)
+    hl = run_feddct(tr2, net2, fl2, engine="looped")
+    _assert_histories_close(hb, hl)
+
+
+def test_fedavg_batched_matches_looped_history():
+    tr, net, fl = _setup()
+    hb = run_fedavg(tr, net, fl, engine="batched")
+    tr2, net2, fl2 = _setup()
+    hl = run_fedavg(tr2, net2, fl2, engine="looped")
+    _assert_histories_close(hb, hl)
+
+
+def test_feddct_kernel_agg_matches_reference_agg():
+    # 2 rounds: the interpret-mode kernel is an emulator, keep it short
+    tr, net, fl = _setup(rounds=2)
+    hk = run_feddct(tr, net, fl, engine="batched", use_kernel_agg=True)
+    tr2, net2, fl2 = _setup(rounds=2)
+    hr = run_feddct(tr2, net2, fl2, engine="batched", use_kernel_agg=False)
+    _assert_histories_close(hk, hr)
+
+
+# ---------------------------------------------------------------------------
+# fedagg kernel parity (interpret mode) for engine-shaped inputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p", [(3, 17), (5, 999), (2, 4097)])
+def test_fedagg_odd_p_pad_path(n, p):
+    rng = np.random.default_rng(p)
+    u = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=n).astype(np.float32))
+    out = fedagg_op(u, w, block_p=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fedagg_ref(u, w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fedagg_zero_weight_rows_masked_even_nonfinite():
+    u = jnp.asarray([[1.0, 2.0], [np.nan, np.inf], [3.0, 4.0]], jnp.float32)
+    w = jnp.asarray([1.0, 0.0, 1.0])
+    out = fedagg_op(u, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [2.0, 3.0], rtol=1e-6)
+
+
+def test_fedagg_all_zero_weights_zeros():
+    u = jnp.ones((4, 9), jnp.float32)
+    out = fedagg_op(u, jnp.zeros(4), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+def test_fedagg_pytree_mixed_dtypes_parity():
+    rng = np.random.default_rng(3)
+    stacked = {
+        "f32": jnp.asarray(rng.normal(size=(4, 5, 3)).astype(np.float32)),
+        "bf16": jnp.asarray(rng.normal(size=(4, 7)).astype(np.float32)
+                            ).astype(jnp.bfloat16),
+        "scalar": jnp.asarray(rng.normal(size=(4,)).astype(np.float32)),
+    }
+    w = jnp.asarray([1.0, 2.0, 0.0, 3.0])
+    out = fedagg_pytree(stacked, w, interpret=True)
+    assert out["f32"].shape == (5, 3)
+    assert out["bf16"].dtype == jnp.bfloat16
+    assert out["scalar"].shape == ()
+    for k in stacked:
+        ref = fedagg_ref(
+            stacked[k].reshape(4, -1).astype(jnp.float32), w
+        ).reshape(stacked[k].shape[1:])
+        np.testing.assert_allclose(np.asarray(out[k], np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_fedagg_pytree_spec_cache_reused():
+    from repro.kernels import ops
+    stacked = {"a": jnp.ones((2, 3)), "b": jnp.ones((2, 4, 2))}
+    w = jnp.ones(2)
+    fedagg_pytree(stacked, w, interpret=True)
+    n_before = len(ops._UNFLATTEN_SPECS)
+    fedagg_pytree(stacked, w, interpret=True)
+    assert len(ops._UNFLATTEN_SPECS) == n_before

@@ -28,6 +28,7 @@ def test_feddct_learns_on_cnn():
     assert h.accuracy[-1] > h.accuracy[0] + 0.05
 
 
+@pytest.mark.slow
 def test_all_methods_produce_histories():
     tr, net, fl = _setup(rounds=3, scale=0.01)
     for m in ("feddct", "fedavg", "tifl", "fedasync"):
@@ -37,6 +38,7 @@ def test_all_methods_produce_histories():
         assert h.method == m
 
 
+@pytest.mark.slow
 def test_feddct_time_advantage_same_model_quality_path():
     """Same network realization, same rounds: FedDCT's clock < FedAvg's
     (paper Table 2 time column, miniature)."""
@@ -47,6 +49,7 @@ def test_feddct_time_advantage_same_model_quality_path():
     assert t_dct < t_avg
 
 
+@pytest.mark.slow
 def test_lm_trainer_fl_roundtrip():
     """FedDCT over a reduced LLM architecture (deliverable-f integration)."""
     fl = FLConfig(n_clients=6, n_tiers=3, tau=2, rounds=3, mu=0.0,

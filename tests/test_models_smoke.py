@@ -15,6 +15,8 @@ from repro.launch.steps import make_train_step
 from repro.models import (cnn_forward, decode_step, forward, init_cnn,
                           init_decode_state, init_model, lm_loss)
 
+pytestmark = pytest.mark.slow  # one train step per zoo arch, ~5-10 s each
+
 ASSIGNED = ["granite-20b", "nemotron-4-340b", "phi4-mini-3.8b",
             "llama3.2-1b", "mixtral-8x7b", "hubert-xlarge", "hymba-1.5b",
             "arctic-480b", "xlstm-350m", "chameleon-34b"]

@@ -31,6 +31,7 @@ def test_claim_feddct_round_time_bounded():
     assert max(deltas[1:]) <= 30.0 + 1e-6
 
 
+@pytest.mark.slow
 def test_claim_fedavg_suffers_from_stragglers():
     """FedAvg round time grows with mu; FedDCT's barely moves."""
     t_avg_0 = np.mean(np.diff(_run("fedavg", mu=0.0).times))
@@ -41,6 +42,7 @@ def test_claim_fedavg_suffers_from_stragglers():
     assert t_dct_8 - t_dct_0 < t_avg_8 - t_avg_0   # feddct more robust
 
 
+@pytest.mark.slow
 def test_claim_tier_trace_recorded():
     h = _run("feddct", mu=0.1, rounds=8)
     assert len(h.tier) == 8

@@ -1,8 +1,7 @@
-"""Dynamic tiering (Alg. 3, Eqs. 1-2) — unit + hypothesis properties."""
+"""Dynamic tiering (Alg. 3, Eqs. 1-2) — unit + seeded-sweep properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.network import WirelessNetwork
@@ -14,12 +13,14 @@ def test_tiering_sorted_and_partition():
     assert ts == [[1, 4], [2, 0], [3]]
 
 
-@given(st.dictionaries(st.integers(0, 200),
-                       st.floats(0.01, 1e4, allow_nan=False), min_size=1,
-                       max_size=60),
-       st.integers(1, 10))
-@settings(max_examples=100, deadline=None)
-def test_tiering_properties(at, m):
+@pytest.mark.parametrize("seed", range(25))
+def test_tiering_properties(seed):
+    gen = np.random.default_rng(seed)
+    n = int(gen.integers(1, 61))
+    ids = gen.choice(201, size=n, replace=False)
+    at = {int(c): float(t) for c, t in
+          zip(ids, gen.uniform(0.01, 1e4, size=n))}
+    m = int(gen.integers(1, 11))
     ts = tiering(at, m)
     flat = [c for tier in ts for c in tier]
     # exact partition of clients
@@ -32,9 +33,12 @@ def test_tiering_properties(at, m):
         assert max(at[c] for c in a) <= min(at[c] for c in b)
 
 
-@given(st.floats(0.01, 1e3), st.integers(0, 10_000), st.floats(0.01, 1e3))
-@settings(max_examples=200, deadline=None)
-def test_update_avg_time_is_running_mean(at, ct, t_new):
+@pytest.mark.parametrize("seed", range(40))
+def test_update_avg_time_is_running_mean(seed):
+    gen = np.random.default_rng(seed)
+    at = float(gen.uniform(0.01, 1e3))
+    ct = int(gen.integers(0, 10_001))
+    t_new = float(gen.uniform(0.01, 1e3))
     # Eq. 2 == arithmetic mean over ct+1 samples when at is mean of ct
     out = update_avg_time(at, ct, t_new)
     expected = (at * ct + t_new) / (ct + 1)
