@@ -1,0 +1,121 @@
+"""A/B benchmark: sequential-merge FedAsync vs windowed-cohort runtime.
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--clients 32]
+        [--rounds 4] [--tau 8] [--window-secs 15] [--smoke]
+
+Both arms run the SAME event-driven runtime (repro.runtime) over the
+same ``WirelessNetwork`` realization and the same update budget
+(rounds * tau merged client updates); the only difference is the
+aggregation window:
+
+* sequential — ``window=0``: one merge per completion event, cohorts of
+  one (the pre-runtime FedAsync behaviour, history-identical to it);
+* windowed   — ``window_secs=T``: every completion landing within T
+  virtual seconds of the anchor event drains as ONE vmapped cohort with
+  a single fused staleness-weighted merge.
+
+Reported per arm: real wall-clock, merged client updates per second
+(events/sec), mean drained cohort size, and the virtual time reached.
+Events/sec is the server-step throughput knob the ROADMAP's
+"async/overlapped rounds" item asks for: the windowed arm does the same
+local-training work but amortizes dispatch + merge over the cohort.
+
+``--smoke`` runs a CI-sized configuration (< 30 s on 2 CPU cores) and
+exits non-zero unless the windowed arm actually drains multi-client
+cohorts (mean cohort > 1) and beats sequential events/sec.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.config import get_arch
+from repro.config.base import FLConfig
+from repro.fl.client import CNNTrainer
+from repro.fl.network import WirelessNetwork
+from repro.runtime.async_loop import AsyncRunner
+
+
+def run_arm(trainer, net, fl, *, window_secs: float, eval_every: int):
+    t0 = time.perf_counter()
+    runner = AsyncRunner(trainer, net, fl, window_secs=window_secs,
+                         eval_every=eval_every)
+    hist = runner.run()
+    wall = time.perf_counter() - t0
+    events = sum(runner.cohort_sizes)
+    return {"wall_s": wall,
+            "events": events,
+            "events_per_sec": events / wall,
+            "mean_cohort": hist.meta["mean_cohort"],
+            "n_drains": hist.meta["n_drains"],
+            "virtual_time": hist.times[-1] if hist.times else 0.0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--window-secs", type=float, default=15.0)
+    ap.add_argument("--mu", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (< 30 s); exits non-zero unless "
+                         "windowed cohorts beat sequential merging")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # cohort-16 windows: big enough that the vmapped-cohort win is
+        # robustly > 1x on a 2-core CI runner, small enough for < 30 s
+        args.clients, args.rounds, args.tau = 32, 2, 8
+        args.window_secs = 20.0
+
+    fl = FLConfig(n_clients=args.clients, n_tiers=4, tau=args.tau,
+                  rounds=args.rounds, mu=args.mu, primary_frac=0.7,
+                  seed=args.seed, lr=0.003)
+    net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                          fl.mu, fl.failure_delay, fl.seed)
+    trainer = CNNTrainer(get_arch("cnn-mnist").reduced(), fl, "mnist",
+                         scale=0.01)
+    # evals are not what this harness measures — keep only the terminal
+    # one (the runtime always records the final state).
+    eval_every = fl.rounds * fl.tau + 1
+
+    # warm the jit caches of BOTH arms with an identical throwaway run
+    # (the drained cohort sizes — and hence the compiled vmap widths —
+    # are a pure function of (network, fl, window), so the same config
+    # warms exactly the programs the timed run needs).
+    for w in (0.0, args.window_secs):
+        run_arm(trainer, net, fl, window_secs=w, eval_every=eval_every)
+
+    results = {}
+    for label, w in (("sequential", 0.0), ("windowed", args.window_secs)):
+        results[label] = run_arm(trainer, net, fl, window_secs=w,
+                                 eval_every=eval_every)
+        r = results[label]
+        print(f"[{label:10s}] window_secs={w:5.1f}  "
+              f"events={r['events']:4d}  wall={r['wall_s']:6.2f}s  "
+              f"{r['events_per_sec']:7.2f} ev/s  "
+              f"mean_cohort={r['mean_cohort']:5.2f}  "
+              f"drains={r['n_drains']:4d}")
+    speedup = (results["windowed"]["events_per_sec"]
+               / results["sequential"]["events_per_sec"])
+    results["speedup"] = speedup
+    print(f"[bench_async] windowed/sequential events/sec: {speedup:.2f}x")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[bench_async] results -> {args.out}")
+    if args.smoke:
+        ok = (results["windowed"]["mean_cohort"] > 1.0 and speedup > 1.0)
+        print(f"[bench_async] smoke {'PASS' if ok else 'FAIL'}")
+        raise SystemExit(0 if ok else 1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

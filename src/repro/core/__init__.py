@@ -2,17 +2,22 @@ from repro.core.tiering import tiering, update_avg_time, evaluate_client
 from repro.core.selection import cstt, tier_timeouts, move_tier, select_from_tier
 from repro.core.aggregation import (weighted_average,
                                     weighted_average_stacked,
-                                    staleness_merge)
+                                    staleness_merge,
+                                    staleness_weighted_merge)
 from repro.core.engine import BatchedClientEngine, make_engine
 from repro.core.scheduler import run_feddct
 from repro.core.baselines import (run_fedavg, run_tifl, run_fedasync,
-                                  run_fedprox, run_method)
+                                  run_fedasync_sequential, run_fedbuff,
+                                  run_feddct_async, run_fedprox,
+                                  run_method)
 
 __all__ = [
     "tiering", "update_avg_time", "evaluate_client",
     "cstt", "tier_timeouts", "move_tier", "select_from_tier",
     "weighted_average", "weighted_average_stacked", "staleness_merge",
+    "staleness_weighted_merge",
     "BatchedClientEngine", "make_engine",
-    "run_feddct", "run_fedavg", "run_tifl", "run_fedasync", "run_fedprox",
-    "run_method",
+    "run_feddct", "run_fedavg", "run_tifl", "run_fedasync",
+    "run_fedasync_sequential", "run_fedbuff", "run_feddct_async",
+    "run_fedprox", "run_method",
 ]

@@ -1,19 +1,27 @@
 """Server-side model aggregation (Alg. 1 line 8 / Alg. 2 last line).
 
-Two layers:
+Three layers:
 
 * ``weighted_average_stacked`` — the engine hot path.  Takes a pytree
   whose leaves already carry a leading client axis (N, ...) plus a
   weight vector (N,), and reduces on device.  Zero-weight rows are
   masked out (fused straggler masking), so dropped clients never force
-  a host-side re-pack of the buffer.  ``use_kernel=True`` routes
-  through the pytree-native Pallas fedagg path (single flattened
-  (N, P) kernel pass); otherwise a pure-jnp einsum-style reduction.
+  a host-side re-pack of the buffer.  An optional per-row ``alphas``
+  vector multiplies the weights (staleness discounting for the async
+  runtime); a zero-alpha row is masked exactly like a zero weight.
+  ``use_kernel=True`` routes through the pytree-native Pallas fedagg
+  path (single flattened (N, P) kernel pass); otherwise a pure-jnp
+  einsum-style reduction.
+* ``staleness_weighted_merge`` — the async runtime's windowed merge:
+  the exact batched equivalent of sequentially applying
+  ``staleness_merge`` row by row, computed as ONE stacked reduction
+  with the global model riding along as row 0.
 * ``weighted_average`` — list-of-pytrees convenience wrapper kept for
   the looped reference implementations and external callers; it stacks
   then delegates.
 
-``staleness_merge`` is FedAsync's two-model blend.
+``staleness_merge`` is FedAsync's two-model blend (the one-client
+degenerate case of ``staleness_weighted_merge``).
 """
 
 from __future__ import annotations
@@ -26,8 +34,10 @@ import numpy as np
 
 
 @jax.jit
-def _agg_jnp(stacked, w):
-    wn = w / jnp.maximum(w.sum(), 1e-30)
+def _agg_jnp(stacked, w, a):
+    eff = w * a
+    wn = jnp.where(eff > 0.0, eff, 0.0)
+    wn = wn / jnp.maximum(wn.sum(), 1e-30)
 
     def agg(leaf):
         wb = wn.reshape((-1,) + (1,) * (leaf.ndim - 1))
@@ -36,19 +46,24 @@ def _agg_jnp(stacked, w):
     return jax.tree_util.tree_map(agg, stacked)
 
 
-def weighted_average_stacked(stacked, weights, *, use_kernel: bool = False,
+def weighted_average_stacked(stacked, weights, *, alphas=None,
+                             use_kernel: bool = False,
                              interpret: Optional[bool] = None):
     """Reduce a stacked update pytree (leaves (N, ...)) with weights (N,).
 
-    sum_c w_c * u_c / sum(w).  Rows with w_c == 0 are masked to exactly
-    zero before the reduction (straggler masking); if every weight is
-    zero the result is an all-zeros pytree.
+    sum_c eff_c * u_c / sum(eff) with eff_c = w_c * alpha_c
+    (``alphas=None`` -> all ones).  Rows with eff_c <= 0 are masked to
+    exactly zero before the reduction (straggler masking); if every
+    effective weight is zero the result is an all-zeros pytree.
     """
     w = jnp.asarray(weights, jnp.float32)
     if use_kernel:
         from repro.kernels import fedagg_pytree
-        return fedagg_pytree(stacked, w, interpret=interpret)
-    return _agg_jnp(stacked, w)
+        a = None if alphas is None else jnp.asarray(alphas, jnp.float32)
+        return fedagg_pytree(stacked, w, alphas=a, interpret=interpret)
+    a = (jnp.ones_like(w) if alphas is None
+         else jnp.asarray(alphas, jnp.float32))
+    return _agg_jnp(stacked, w, a)
 
 
 def weighted_average(param_list: Sequence, sizes: Sequence[float],
@@ -69,3 +84,53 @@ def staleness_merge(global_params, client_params, alpha_t: float):
         lambda g, c: ((1 - alpha_t) * g.astype(jnp.float32)
                       + alpha_t * c.astype(jnp.float32)).astype(g.dtype),
         global_params, client_params)
+
+
+def staleness_merge_coefficients(alphas) -> np.ndarray:
+    """Row coefficients of the fused window merge.
+
+    Sequentially applying ``staleness_merge`` with alphas a_1..a_K
+    (row order = merge order) telescopes to the convex combination
+
+        w <- prod_i (1-a_i) * w  +  sum_i a_i * prod_{j>i} (1-a_j) * w_i
+
+    Returns the (K+1,) coefficient vector [global, row_1..row_K]; the
+    entries sum to exactly 1 (up to fp), so the normalized stacked
+    reduction reproduces the sequential merge in one pass.
+    """
+    a = np.asarray(alphas, np.float64).reshape(-1)
+    one_minus = 1.0 - a
+    # suffix[i] = prod_{j>i} (1-a_j); suffix[K-1] = 1
+    suffix = np.ones_like(a)
+    if a.size > 1:
+        suffix[:-1] = np.cumprod(one_minus[::-1])[::-1][1:]
+    coef = a * suffix
+    g = float(np.prod(one_minus)) if a.size else 1.0
+    return np.concatenate([[g], coef]).astype(np.float32)
+
+
+def staleness_weighted_merge(global_params, stacked, alphas, *,
+                             use_kernel: bool = False,
+                             interpret: Optional[bool] = None):
+    """Merge a whole aggregation window into the global model at once.
+
+    ``stacked`` holds the window's client models with a leading row axis
+    (K, ...); ``alphas`` are the per-row staleness weights
+    a_i = alpha * (s_i + 1)^-a in merge order.  The result is the same
+    convex combination a sequential ``staleness_merge`` fold would
+    produce (up to float reassociation), computed as ONE stacked
+    reduction (optionally the
+    fused Pallas fedagg kernel) with the global model as row 0.
+    Zero-alpha rows (masked stragglers) contribute exactly nothing.
+    """
+    coef = staleness_merge_coefficients(alphas)
+    full = jax.tree_util.tree_map(
+        lambda g, s: jnp.concatenate(
+            [g[None].astype(s.dtype), s], axis=0),
+        global_params, stacked)
+    # uniform unit weights; the merge coefficients ride in the alpha
+    # row-vector and already sum to 1, so normalization is a no-op.
+    ones = np.ones(coef.shape[0], np.float32)
+    return weighted_average_stacked(full, ones, alphas=coef,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)

@@ -7,6 +7,11 @@
   adaptive tier selection; round capped at Omega (slower uploads lost).
 * FedAsync [Xie'19]: fully asynchronous, staleness-weighted merge
   alpha_t = alpha * (t - tau_i + 1)^(-a); event-queue virtual clock.
+  Runs on the event-driven runtime (repro.runtime) — ``window=0`` is
+  the classic one-merge-per-event loop, ``window``/``window_secs``
+  batch concurrently-finishing completions into one vmapped cohort.
+* FedBuff [Nguyen'22]: FedAsync with a K-completion aggregation goal —
+  the runtime with a count window.
 * FedProx [Li'20]: FedAvg + proximal blend toward the global model
   (extra baseline beyond the paper).
 
@@ -47,9 +52,9 @@ def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         sel = [int(c) for c in rng.choice(fl.n_clients,
                                           size=min(fl.tau, fl.n_clients),
                                           replace=False)]
-        times = [network.delay(c, rnd) for c in sel]
+        times = network.delays(sel, rnd)
         params = eng.train_round(params, sel, rnd)
-        clock += max(times)                      # waits for everyone
+        clock += float(times.max())              # waits for everyone
         if rnd % eval_every == 0:
             acc = trainer.evaluate(params)
             hist.record(time=clock, rnd=rnd, acc=acc,
@@ -103,8 +108,7 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                                           size=min(fl.tau, len(members)),
                                           replace=False)]
         times, survivors = [], []
-        for c in sel:
-            st = network.delay(c, rnd)
+        for c, st in zip(sel, network.delays(sel, rnd)):
             times.append(min(st, fl.omega))
             if st >= fl.omega:               # lost this round
                 continue
@@ -128,8 +132,16 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
     return hist
 
 
-def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
-                 verbose: bool = False, eval_every: int = 5) -> RunHistory:
+def run_fedasync_sequential(trainer, network, fl: FLConfig, *,
+                            engine: str = "batched", verbose: bool = False,
+                            eval_every: int = 5) -> RunHistory:
+    """The pre-runtime sequential FedAsync loop: one merge per event.
+
+    Kept as the reference implementation the event-driven runtime is
+    equivalence-tested against (``run_fedasync(window=0)`` must produce
+    an identical ``RunHistory``).  New callers should use
+    ``run_fedasync``.
+    """
     hist = RunHistory(method="fedasync", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "alpha": fl.async_alpha, "a": fl.async_a})
@@ -142,10 +154,12 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
     snapshot: Dict[int, object] = {c: params for c in range(fl.n_clients)}
     # event queue: (finish_time, client, model_version_at_start, round_idx)
     heap: List = []
-    for c in range(fl.n_clients):
-        heapq.heappush(heap, (network.delay(c, 0), c, 0, 0))
+    for t, c in zip(network.delays(np.arange(fl.n_clients), 0),
+                    range(fl.n_clients)):
+        heapq.heappush(heap, (float(t), c, 0, 0))
     # budget: same number of aggregations as sync methods have rounds*tau
     max_updates = fl.rounds * fl.tau
+    upd = 0
     for upd in range(1, max_updates + 1):
         finish, c, v0, ridx = heapq.heappop(heap)
         clock = finish
@@ -171,14 +185,59 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
                 print(f"[fedasync] u={upd:5d} t={clock:9.1f}s acc={acc:.4f}")
             if fl.target_accuracy and acc >= fl.target_accuracy:
                 break
+    # terminal eval: the budget can run out between eval points — record
+    # the true final state so RunHistory ends where the model ends.
+    if not hist.rounds or hist.rounds[-1] != upd:
+        hist.record(time=clock, rnd=upd, acc=trainer.evaluate(params),
+                    n_selected=1)
     return hist
+
+
+def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
+                 use_kernel_agg: bool = False, verbose: bool = False,
+                 eval_every: int = 5, window: int = 0,
+                 window_secs: float = 0.0) -> RunHistory:
+    """FedAsync on the event-driven runtime.
+
+    ``window=0`` (default) reproduces the sequential one-merge-per-event
+    loop history-identically; ``window=K`` / ``window_secs=T`` batch
+    concurrently-finishing completions into one vmapped cohort merged
+    with per-client staleness weights (FedBuff / time-triggered
+    semantics).
+    """
+    from repro.runtime.async_loop import AsyncRunner
+    return AsyncRunner(trainer, network, fl, method="fedasync",
+                       engine=engine, use_kernel_agg=use_kernel_agg,
+                       window=window, window_secs=window_secs,
+                       eval_every=eval_every, verbose=verbose).run()
+
+
+def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
+                use_kernel_agg: bool = False, verbose: bool = False,
+                eval_every: int = 5, window: int = 0,
+                window_secs: float = 0.0) -> RunHistory:
+    """FedBuff [Nguyen'22]: async with a K-completion aggregation goal
+    (default K = fl.tau, the sync methods' per-round cohort size)."""
+    from repro.runtime.async_loop import AsyncRunner
+    return AsyncRunner(trainer, network, fl, method="fedbuff",
+                       engine=engine, use_kernel_agg=use_kernel_agg,
+                       window=window or fl.tau, window_secs=window_secs,
+                       eval_every=eval_every, verbose=verbose).run()
+
+
+def run_feddct_async(trainer, network, fl: FLConfig, **kw) -> RunHistory:
+    """Semi-async FedDCT (tier timeouts as aggregation windows); see
+    repro.runtime.async_loop.run_feddct_async."""
+    from repro.runtime.async_loop import run_feddct_async as _run
+    return _run(trainer, network, fl, **kw)
 
 
 def run_method(method: str, trainer, network, fl: FLConfig, **kw
                ) -> RunHistory:
     from repro.core.scheduler import run_feddct
     fns = {"feddct": run_feddct, "fedavg": run_fedavg, "tifl": run_tifl,
-           "fedasync": run_fedasync, "fedprox": run_fedprox}
+           "fedasync": run_fedasync, "fedprox": run_fedprox,
+           "fedbuff": run_fedbuff, "feddct_async": run_feddct_async}
     return fns[method](trainer, network, fl, **kw)
 
 
@@ -207,14 +266,14 @@ def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
         sel = [int(c) for c in rng.choice(fl.n_clients,
                                           size=min(fl.tau, fl.n_clients),
                                           replace=False)]
-        times = [network.delay(c, rnd) for c in sel]
+        times = network.delays(sel, rnd)
         stacked, sizes = eng.train_clients(params, sel, rnd)
         prox = jax.tree_util.tree_map(
             lambda n, g: (blend * n.astype(jnp.float32)
                           + (1 - blend) * g.astype(jnp.float32)[None]
                           ).astype(n.dtype), stacked, params)
         params = eng.aggregate(prox, sizes)
-        clock += max(times)
+        clock += float(times.max())
         if rnd % eval_every == 0:
             acc = trainer.evaluate(params)
             hist.record(time=clock, rnd=rnd, acc=acc, n_selected=len(sel))

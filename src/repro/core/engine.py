@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import weighted_average_stacked
+from repro.core.aggregation import (staleness_weighted_merge,
+                                    weighted_average_stacked)
 
 
 class BatchedClientEngine:
@@ -48,8 +49,19 @@ class BatchedClientEngine:
         self.pad_cohorts = pad_cohorts
         self._can_batch = (not force_looped
                            and hasattr(trainer, "local_train_batch"))
+        self._can_cohort = (not force_looped
+                            and hasattr(trainer, "local_train_cohort"))
 
     # -- local training -------------------------------------------------
+    def _pad_pow2(self, *lists):
+        """Pad parallel per-client lists up to the next power of two by
+        repeating their last element (see ``pad_cohorts``)."""
+        if not self.pad_cohorts:
+            return lists
+        n = len(lists[0])
+        target = 1 << (n - 1).bit_length()
+        return tuple(l + [l[-1]] * (target - n) for l in lists)
+
     def train_clients(self, params, client_ids: Sequence[int],
                       rnd_seed: int):
         """-> (stacked update pytree with leading axis len(client_ids),
@@ -59,10 +71,7 @@ class BatchedClientEngine:
             return None, np.zeros((0,), np.float32)
         if self._can_batch:
             n = len(ids)
-            run_ids = ids
-            if self.pad_cohorts:
-                target = 1 << (n - 1).bit_length()
-                run_ids = ids + [ids[-1]] * (target - n)
+            (run_ids,) = self._pad_pow2(ids)
             try:
                 stacked, sizes = self.trainer.local_train_batch(
                     params, run_ids, rnd_seed)
@@ -80,12 +89,58 @@ class BatchedClientEngine:
         sizes = np.asarray([s for _, s in outs], np.float32)
         return stacked, sizes
 
+    def train_cohort(self, start_params: Sequence, client_ids: Sequence[int],
+                     rnd_seeds: Sequence[int]):
+        """Async-window cohort: client i trains from its OWN snapshot
+        ``start_params[i]`` with its own data-stream seed.
+
+        -> (stacked update pytree with leading axis len(client_ids),
+        sizes (len(client_ids),) f32).  Empty cohort -> (None, empty).
+        Falls back to looping ``local_train`` per client when the
+        trainer lacks ``local_train_cohort``.
+        """
+        ids = [int(c) for c in client_ids]
+        seeds = [int(s) for s in rnd_seeds]
+        starts = list(start_params)
+        if not ids:
+            return None, np.zeros((0,), np.float32)
+        if self._can_cohort:
+            n = len(ids)
+            run_ids, run_seeds, run_starts = self._pad_pow2(ids, seeds,
+                                                            starts)
+            stacked_starts = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *run_starts)
+            try:
+                stacked, sizes = self.trainer.local_train_cohort(
+                    stacked_starts, run_ids, run_seeds)
+                if len(run_ids) != n:
+                    stacked = jax.tree_util.tree_map(
+                        lambda l: l[:n], stacked)
+                    sizes = sizes[:n]
+                return stacked, sizes
+            except NotImplementedError:
+                self._can_cohort = False
+        outs = [self.trainer.local_train(p0, c, rnd_seed=s)
+                for p0, c, s in zip(starts, ids, seeds)]
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[p for p, _ in outs])
+        sizes = np.asarray([s for _, s in outs], np.float32)
+        return stacked, sizes
+
     # -- aggregation ----------------------------------------------------
     def aggregate(self, stacked, weights):
         """Weighted average of the stacked cohort; zero-weight rows are
         masked stragglers and contribute nothing."""
         return weighted_average_stacked(
             stacked, weights, use_kernel=self.use_kernel_agg,
+            interpret=self.interpret)
+
+    def merge_staleness(self, params, stacked, alphas):
+        """Fused staleness-weighted window merge (async runtime): the
+        batched equivalent of folding ``staleness_merge`` over the
+        stacked rows, one device reduction."""
+        return staleness_weighted_merge(
+            params, stacked, alphas, use_kernel=self.use_kernel_agg,
             interpret=self.interpret)
 
     # -- fused round ----------------------------------------------------

@@ -87,8 +87,8 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         survivors: List[int] = []
         times_per_tier: Dict[int, List[float]] = {}
         n_straggle = 0
-        for c, k in selected:
-            st = network.delay(c, rnd)
+        sts = network.delays([c for c, _ in selected], rnd)
+        for (c, k), st in zip(selected, sts):
             times_per_tier.setdefault(k, []).append(min(st, d_max[k]))
             if st >= d_max[k]:
                 # straggler: drop update, enter evaluation lane

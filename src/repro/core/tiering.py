@@ -39,7 +39,6 @@ def evaluate_client(network, client: int, rnd: int, kappa: int,
 
     Returns (new_average_time, wall_time_spent).
     """
-    times = [network.delay(client, rnd, attempt=a + 1)
-             for a in range(max(kappa, 1))]
-    capped = [min(t, omega) for t in times]
-    return float(np.mean(times)), float(np.sum(capped))
+    k = max(kappa, 1)
+    times = network.delays([client] * k, rnd, attempt=np.arange(k) + 1)
+    return float(np.mean(times)), float(np.minimum(times, omega).sum())

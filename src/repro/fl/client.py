@@ -48,6 +48,7 @@ class CNNTrainer:
         self._step = jax.jit(self._step_impl, static_argnames=("im2col",))
         self._eval = jax.jit(self._eval_impl)
         self._batch_train = jax.jit(self._batch_train_impl)
+        self._batch_train_multi = jax.jit(self._batch_train_multi_impl)
 
     def _step_impl(self, params, opt_state, x, y, im2col: bool = False):
         loss, grads = jax.value_and_grad(
@@ -110,6 +111,32 @@ class CNNTrainer:
             return p
         return jax.vmap(one_client)(xs, ys)
 
+    def _bucketed_train(self, keys, train_chunk):
+        """Shared shape-bucketing for the batched paths: build each
+        (client, seed)-keyed batch stream once, bucket positions by
+        stream shape (ragged partitions), run ``train_chunk(xs, ys,
+        positions)`` per bucket, and reassemble chunk rows in input
+        order."""
+        data = {}                     # pad slots repeat (client, seed)
+        buckets: Dict[tuple, List[int]] = {}
+        for pos, key in enumerate(keys):
+            if key not in data:       # keys, so compute each stream once
+                data[key] = self._client_epoch_batches(*key)
+            buckets.setdefault(data[key][0].shape, []).append(pos)
+        chunks, order = [], []
+        for positions in buckets.values():
+            xs = jnp.asarray(np.stack([data[keys[p]][0]
+                                       for p in positions]))
+            ys = jnp.asarray(np.stack([data[keys[p]][1]
+                                       for p in positions]))
+            chunks.append(train_chunk(xs, ys, positions))
+            order.extend(positions)
+        if len(chunks) == 1:          # common case: one shape bucket,
+            return chunks[0]          # order already the input order
+        inv = np.argsort(np.asarray(order))
+        return jax.tree_util.tree_map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0)[inv], *chunks)
+
     def local_train_batch(self, params, client_ids, rnd_seed: int):
         """Train many clients in one jitted vmapped scan.
 
@@ -120,25 +147,46 @@ class CNNTrainer:
         """
         sizes = np.asarray([len(self.clients[c]) for c in client_ids],
                            np.float32)
-        buckets: Dict[tuple, List[int]] = {}
-        data = {}                     # per client id: pad slots repeat
-        for pos, c in enumerate(client_ids):
-            if c not in data:         # ids so compute each stream once
-                data[c] = self._client_epoch_batches(c, rnd_seed)
-            buckets.setdefault(data[c][0].shape, []).append(pos)
-        chunks, order = [], []
-        for shape, positions in buckets.items():
-            xs = jnp.asarray(np.stack(
-                [data[client_ids[p]][0] for p in positions]))
-            ys = jnp.asarray(np.stack(
-                [data[client_ids[p]][1] for p in positions]))
-            chunks.append(self._batch_train(params, xs, ys))
-            order.extend(positions)
-        if len(chunks) == 1:          # common case: one shape bucket,
-            return chunks[0], sizes   # order already the input order
-        inv = np.argsort(np.asarray(order))
-        stacked = jax.tree_util.tree_map(
-            lambda *leaves: jnp.concatenate(leaves, axis=0)[inv], *chunks)
+        stacked = self._bucketed_train(
+            [(c, rnd_seed) for c in client_ids],
+            lambda xs, ys, positions: self._batch_train(params, xs, ys))
+        return stacked, sizes
+
+    # -- per-client start params (async runtime hot path) ---------------
+    def _batch_train_multi_impl(self, start_params, xs, ys):
+        """Like ``_batch_train_impl`` but every client starts from its
+        OWN model snapshot: ``start_params`` carries a leading client
+        axis, vmapped alongside the data."""
+        def one_client(p0, x_seq, y_seq):
+            opt_state = self.opt.init(p0)
+            def step(carry, xy):
+                p, o = carry
+                p, o, loss = self._step_impl(p, o, xy[0], xy[1],
+                                             im2col=True)
+                return (p, o), loss
+            (p, _), _ = jax.lax.scan(step, (p0, opt_state), (x_seq, y_seq))
+            return p
+        return jax.vmap(one_client)(start_params, xs, ys)
+
+    def local_train_cohort(self, start_params, client_ids, rnd_seeds):
+        """Async-window cohort: per-client start models AND per-client
+        data-stream seeds, one jitted vmapped scan.
+
+        ``start_params`` is a stacked pytree (leading axis
+        len(client_ids)) of the model snapshot each client trains from;
+        batch streams are identical to looping
+        ``local_train(start_i, c_i, seed_i)``.
+        """
+        sizes = np.asarray([len(self.clients[c]) for c in client_ids],
+                           np.float32)
+
+        def chunk(xs, ys, positions):
+            idx = jnp.asarray(np.asarray(positions, np.int32))
+            starts = jax.tree_util.tree_map(lambda l: l[idx], start_params)
+            return self._batch_train_multi(starts, xs, ys)
+
+        stacked = self._bucketed_train(list(zip(client_ids, rnd_seeds)),
+                                       chunk)
         return stacked, sizes
 
     def evaluate(self, params, max_samples: int = 2048) -> float:
@@ -170,6 +218,7 @@ class LMTrainer:
         self._init_fn = init_fn
         self._eval = jax.jit(self._eval_impl)
         self._batch_train = jax.jit(self._batch_train_impl)
+        self._batch_train_multi = jax.jit(self._batch_train_multi_impl)
 
     def _step_impl(self, params, opt_state, tokens):
         def loss_fn(p):
@@ -229,6 +278,35 @@ class LMTrainer:
                       for ep in range(self.fl.local_epochs)])
             for c in client_ids])                   # (C, E, B, S)
         stacked = self._batch_train(params, jnp.asarray(toks))
+        sizes = np.asarray([len(self.client_toks[c]) for c in client_ids],
+                           np.float32)
+        return stacked, sizes
+
+    def _batch_train_multi_impl(self, start_params, tokens):
+        """tokens (C, E, B, S), start_params stacked (C, ...): every
+        client trains from its own snapshot."""
+        def one_client(p0, tok_seq):
+            opt_state = self.opt.init(p0)
+            def step(carry, tok):
+                p, o = carry
+                p, o, loss = self._step_impl(p, o, tok)
+                return (p, o), loss
+            (p, _), _ = jax.lax.scan(step, (p0, opt_state), tok_seq)
+            return p
+        return jax.vmap(one_client)(start_params, tokens)
+
+    def local_train_cohort(self, start_params, client_ids, rnd_seeds):
+        """Async-window cohort: per-client start models and per-client
+        seeds; batch streams identical to looping
+        ``local_train(start_i, c_i, seed_i)``."""
+        if self._custom_step:
+            raise NotImplementedError(
+                "custom step_fn (pjit) trainers use the looped path")
+        toks = np.stack([
+            np.stack([self._batch(self.client_toks[c], s * 131 + ep)
+                      for ep in range(self.fl.local_epochs)])
+            for c, s in zip(client_ids, rnd_seeds)])    # (C, E, B, S)
+        stacked = self._batch_train_multi(start_params, jnp.asarray(toks))
         sizes = np.asarray([len(self.client_toks[c]) for c in client_ids],
                            np.float32)
         return stacked, sizes

@@ -8,6 +8,12 @@ masking are fused: a zero-weight row (a dropped/straggling client) is
 zeroed inside the kernel before the reduction, so non-finite garbage in
 masked rows can never poison the average and the scheduler never has to
 re-pack the stacked buffer after a drop.
+
+The async runtime adds a per-row ``alphas`` vector (staleness merge
+coefficients): the effective row weight is ``w_c * alpha_c``, so a
+zero-alpha row (a fully-stale / masked client) is a straggler exactly
+like a zero-weight row.  ``alphas=None`` keeps the original FedAvg
+semantics (all ones).
 """
 
 from __future__ import annotations
@@ -24,24 +30,21 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
-def _kernel(u_ref, w_ref, o_ref):
+def _kernel(u_ref, w_ref, a_ref, o_ref):
     u = u_ref[...].astype(jnp.float32)          # (N, bp)
     w = w_ref[...].astype(jnp.float32)          # (N,)
-    # fused straggler mask: zero-weight clients contribute exactly 0,
-    # even if their update row is inf/nan (never trained).
+    a = a_ref[...].astype(jnp.float32)          # (N,)
+    w = w * a                                   # staleness-discounted weight
+    # fused straggler mask: zero-weight / zero-alpha clients contribute
+    # exactly 0, even if their update row is inf/nan (never trained).
     u = jnp.where((w > 0.0)[:, None], u, 0.0)
+    w = jnp.where(w > 0.0, w, 0.0)
     w = w / jnp.maximum(w.sum(), 1e-30)
     o_ref[...] = (w @ u).astype(o_ref.dtype)    # (bp,)
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
-def fedagg(updates, weights, *, block_p: int = 16384,
-           interpret: bool = False):
-    """updates (N,P), weights (N,) -> weighted average (P,).
-
-    Zero-weight rows are masked out (see module docstring); if every
-    weight is zero the result is all-zeros.
-    """
+def _fedagg_call(updates, weights, alphas, block_p, interpret):
     n, p = updates.shape
     bp = min(block_p, p)
     pad = (-p) % bp
@@ -55,11 +58,26 @@ def fedagg(updates, weights, *, block_p: int = 16384,
         in_specs=[
             pl.BlockSpec((n, bp), lambda i: (0, i)),
             pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((np_,), updates.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(updates, weights)
+    )(updates, weights, alphas)
     return out[:p] if pad else out
+
+
+def fedagg(updates, weights, *, alphas=None, block_p: int = 16384,
+           interpret: bool = False):
+    """updates (N,P), weights (N,) -> weighted average (P,).
+
+    ``sum_c eff_c * u_c / sum(eff)`` with ``eff_c = w_c * alpha_c``
+    (``alphas=None`` -> all ones).  Rows with ``eff_c <= 0`` are masked
+    out (see module docstring); if every effective weight is zero the
+    result is all-zeros.
+    """
+    if alphas is None:
+        alphas = jnp.ones_like(weights, dtype=jnp.float32)
+    return _fedagg_call(updates, weights, alphas, block_p, interpret)

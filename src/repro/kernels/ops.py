@@ -51,9 +51,11 @@ def ssm_scan_op(x, dt, b_in, c_out, a_log, *, chunk=128, block_d=256,
                     interpret=interpret)
 
 
-def fedagg_op(updates, weights, *, block_p=16384, interpret=None):
+def fedagg_op(updates, weights, *, alphas=None, block_p=16384,
+              interpret=None):
     interpret = on_cpu() if interpret is None else interpret
-    return fedagg(updates, weights, block_p=block_p, interpret=interpret)
+    return fedagg(updates, weights, alphas=alphas, block_p=block_p,
+                  interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -100,15 +102,18 @@ def unflatten_result(flat, treedef, spec):
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
-def fedagg_pytree(stacked_updates, weights, *, block_p=16384,
+def fedagg_pytree(stacked_updates, weights, *, alphas=None, block_p=16384,
                   interpret=None):
     """Weighted-average a pytree whose leaves are stacked (N, ...).
 
     Zero-weight rows (masked stragglers) contribute exactly nothing —
     the mask is fused into the kernel, so callers can keep dropped
-    clients in the stacked buffer instead of re-packing it.
+    clients in the stacked buffer instead of re-packing it.  ``alphas``
+    adds per-row staleness coefficients (effective weight
+    ``w_c * alpha_c``); a zero-alpha row is masked like a zero weight.
     """
     interpret = on_cpu() if interpret is None else interpret
     buf, treedef, spec = flatten_updates(stacked_updates)
-    flat = fedagg(buf, weights, block_p=block_p, interpret=interpret)
+    flat = fedagg(buf, weights, alphas=alphas, block_p=block_p,
+                  interpret=interpret)
     return unflatten_result(flat, treedef, spec)

@@ -51,13 +51,19 @@ def ssm_scan_ref(x, dt, b_in, c_out, a_log):
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
 
 
-def fedagg_ref(updates, weights):
+def fedagg_ref(updates, weights, alphas=None):
     """updates (N,P), weights (N,) -> (P,) weighted average (f32 accum).
 
-    Mirrors the kernel's fused straggler mask: zero-weight rows are
-    zeroed before the reduction so non-finite garbage cannot leak in.
+    Mirrors the kernel's fused straggler mask and optional per-row
+    staleness coefficients: the effective row weight is
+    ``w_c * alpha_c`` (``alphas=None`` -> all ones) and rows whose
+    effective weight is <= 0 are zeroed before the reduction so
+    non-finite garbage cannot leak in.
     """
     w = weights.astype(jnp.float32)
+    if alphas is not None:
+        w = w * alphas.astype(jnp.float32)
     u = jnp.where((w > 0.0)[:, None], updates.astype(jnp.float32), 0.0)
+    w = jnp.where(w > 0.0, w, 0.0)
     w = w / jnp.maximum(w.sum(), 1e-30)
     return jnp.einsum("np,n->p", u, w).astype(updates.dtype)

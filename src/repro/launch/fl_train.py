@@ -26,7 +26,7 @@ def main(argv=None):
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--method", default="feddct",
                     choices=["feddct", "fedavg", "tifl", "fedasync",
-                             "fedprox"])
+                             "fedprox", "fedbuff", "feddct_async"])
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--tiers", type=int, default=5)
@@ -40,6 +40,13 @@ def main(argv=None):
                          "looped = per-client reference path")
     ap.add_argument("--kernel-agg", action="store_true",
                     help="aggregate through the Pallas fedagg pytree path")
+    ap.add_argument("--window", type=int, default=0,
+                    help="async aggregation window: merge up to K "
+                         "completions per event drain (fedasync/fedbuff; "
+                         "0 = one-at-a-time FedAsync)")
+    ap.add_argument("--window-secs", type=float, default=0.0,
+                    help="async aggregation window in virtual seconds "
+                         "(fedasync/fedbuff; 0 = no time window)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -50,9 +57,11 @@ def main(argv=None):
     net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
                           fl.mu, fl.failure_delay, fl.seed)
     trainer = build_fl_clients(args.arch, fl)
-    kw = dict(verbose=True, engine=args.engine)
-    if args.method != "fedasync":
-        kw["use_kernel_agg"] = args.kernel_agg
+    kw = dict(verbose=True, engine=args.engine,
+              use_kernel_agg=args.kernel_agg)
+    if args.method in ("fedasync", "fedbuff"):
+        kw["window"] = args.window
+        kw["window_secs"] = args.window_secs
     hist = run_method(args.method, trainer, net, fl, **kw)
     if hist.accuracy:
         print(f"[fl_train] {args.method} on {args.arch}: "

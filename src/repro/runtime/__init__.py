@@ -1,0 +1,22 @@
+"""Event-driven async federation runtime (virtual clock).
+
+Three pieces, composable from the bottom up:
+
+* ``events``  — ``EventQueue``: a deterministic min-heap of client
+  completions ordered by ``(finish_time, client)`` so every method
+  replays the identical ``WirelessNetwork`` realization.
+* ``buffer``  — ``AggregationBuffer``: drains completions in windows
+  (``window=0`` = sequential FedAsync, ``window=K`` = FedBuff count
+  goal, ``window_secs=T`` = time-triggered batching).
+* ``async_loop`` — ``AsyncRunner`` (each drained window trains as one
+  vmapped cohort, merged with per-row staleness weights fused into the
+  stacked aggregation path) and ``run_feddct_async`` (FedDCT's
+  per-tier timeouts reinterpreted as window deadlines).
+"""
+
+from repro.runtime.buffer import AggregationBuffer
+from repro.runtime.events import ClientEvent, EventQueue
+from repro.runtime.async_loop import AsyncRunner, run_feddct_async
+
+__all__ = ["AggregationBuffer", "ClientEvent", "EventQueue",
+           "AsyncRunner", "run_feddct_async"]

@@ -1,0 +1,267 @@
+"""Event-driven async federation over a virtual clock.
+
+``AsyncRunner`` generalizes the repo's FedAsync loop: client
+completions stream through a deterministic ``EventQueue``, an
+``AggregationBuffer`` drains them in windows, and each drained window
+trains as ONE vmapped cohort through the batched execution engine
+(every client from its OWN model snapshot, with its own data-stream
+seed) before a single fused staleness-weighted merge
+(``alpha_i = alpha * (s_i + 1)^-a`` per row).
+
+* ``window=0``            -> one event per drain: history-identical to
+  the legacy sequential FedAsync implementation (singleton windows take
+  the exact legacy code path: ``train_clients`` + ``staleness_merge``).
+* ``window=K``            -> FedBuff [Nguyen'22]-style semi-async: wait
+  for K completions, merge them as one cohort.
+* ``window_secs=T``       -> time-triggered batching [Zhou'22]: merge
+  everything that lands within T virtual seconds of the anchor event.
+
+``run_feddct_async`` is the semi-async FedDCT variant: CSTT still
+selects tau clients from tiers 1..t every round, but the per-tier
+timeout D_max^t (Eq. 7) becomes the round's aggregation-window
+*deadline* instead of a drop threshold — a selected client that misses
+the window is NOT discarded; its completion stays queued and merges in
+a later round, discounted by its staleness.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.config.base import FLConfig
+from repro.core.aggregation import staleness_merge
+from repro.core.engine import make_engine
+from repro.core.selection import cstt
+from repro.core.tiering import evaluate_client, tiering, update_avg_time
+from repro.fl.metrics import RunHistory
+from repro.runtime.buffer import AggregationBuffer
+from repro.runtime.events import ClientEvent, EventQueue
+
+
+def _alphas(fl: FLConfig, stalenesses: List[int]) -> List[float]:
+    """Per-row merge weights alpha_i = alpha * (s_i + 1)^-a (or the
+    constant-alpha variant), matching the legacy scalar formula."""
+    if fl.async_staleness == "poly":
+        return [fl.async_alpha * (s + 1.0) ** (-fl.async_a)
+                for s in stalenesses]
+    return [fl.async_alpha] * len(stalenesses)
+
+
+def _merge_window(eng, params, snapshots: Dict[int, object],
+                  batch: List[ClientEvent], fl: FLConfig, version: int):
+    """Train one drained window and merge it into ``params``.
+
+    Row order = heap-pop order = sequential merge order; staleness of
+    row i is ``(version + i) - event.version`` — exactly the bookkeeping
+    a one-at-a-time merge loop would produce.  A singleton window takes
+    the legacy path (same jitted program, same float ops) so
+    ``window=0`` reproduces sequential FedAsync bit-for-bit.
+    """
+    if len(batch) == 1:
+        e = batch[0]
+        stacked, _ = eng.train_clients(snapshots[e.client], [e.client],
+                                       e.rnd * 977 + e.client)
+        new_p = jax.tree_util.tree_map(lambda l: l[0], stacked)
+        return staleness_merge(params, new_p,
+                               _alphas(fl, [version - e.version])[0])
+    starts = [snapshots[e.client] for e in batch]
+    ids = [e.client for e in batch]
+    seeds = [e.rnd * 977 + e.client for e in batch]
+    stacked, _ = eng.train_cohort(starts, ids, seeds)
+    alphas = _alphas(fl, [version + i - e.version
+                          for i, e in enumerate(batch)])
+    return eng.merge_staleness(params, stacked, alphas)
+
+
+class AsyncRunner:
+    """Virtual-clock event loop: drain window -> vmapped cohort ->
+    fused staleness merge -> reschedule the merged clients."""
+
+    def __init__(self, trainer, network, fl: FLConfig, *,
+                 method: str = "fedasync", engine: str = "batched",
+                 use_kernel_agg: bool = False, window: int = 0,
+                 window_secs: float = 0.0, eval_every: int = 5,
+                 verbose: bool = False):
+        self.trainer = trainer
+        self.network = network
+        self.fl = fl
+        self.method = method
+        self.engine = engine
+        self.use_kernel_agg = use_kernel_agg
+        self.buffer = AggregationBuffer(window, window_secs)
+        self.eval_every = max(int(eval_every), 1)
+        self.verbose = verbose
+        self.cohort_sizes: List[int] = []
+
+    def run(self) -> RunHistory:
+        fl, net = self.fl, self.network
+        hist = RunHistory(
+            method=self.method, arch=self.trainer.cfg.arch_id,
+            meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                  "alpha": fl.async_alpha, "a": fl.async_a,
+                  "engine": self.engine, "window": self.buffer.window,
+                  "window_secs": self.buffer.window_secs})
+        eng = make_engine(self.trainer, use_kernel_agg=self.use_kernel_agg,
+                          engine=self.engine)
+        params = self.trainer.init_params(fl.seed)
+        # true async: each client trains from the global model snapshot
+        # taken when it STARTED (not finished) — staleness weights exist
+        # to correct exactly that lag.
+        snapshots: Dict[int, object] = {c: params
+                                        for c in range(fl.n_clients)}
+        first = net.delays(np.arange(fl.n_clients), 0)
+        q = EventQueue([ClientEvent(float(t), c, 0, 0, cost=float(t))
+                        for c, t in enumerate(first)])
+        # budget: same number of merges as the sync methods have
+        # rounds * tau client updates
+        max_updates = fl.rounds * fl.tau
+        version, upd, clock = 0, 0, 0.0
+        while upd < max_updates and q:
+            limit = max_updates - upd
+            batch = self.buffer.drain(q, limit=limit)
+            # count-closed windows close at the K-th arrival; time-closed
+            # windows close at anchor + window_secs (the server must wait
+            # out the deadline — it cannot know nothing else is coming)
+            clock = self.buffer.close_time(batch, limit=limit)
+            params = _merge_window(eng, params, snapshots, batch, fl,
+                                   version)
+            version += len(batch)
+            self.cohort_sizes.append(len(batch))
+            rnds = np.asarray([e.rnd + 1 for e in batch])
+            nxt = net.delays([e.client for e in batch], rnds)
+            for e, t in zip(batch, nxt):
+                snapshots[e.client] = params
+                q.push(ClientEvent(clock + float(t), e.client, version,
+                                   e.rnd + 1, cost=float(t)))
+            prev_upd, upd = upd, upd + len(batch)
+            if upd // self.eval_every > prev_upd // self.eval_every:
+                acc = self.trainer.evaluate(params)
+                hist.record(time=clock, rnd=upd, acc=acc,
+                            n_selected=len(batch))
+                if self.verbose:
+                    print(f"[{self.method}] u={upd:5d} t={clock:9.1f}s "
+                          f"acc={acc:.4f} cohort={len(batch)}")
+                if fl.target_accuracy and acc >= fl.target_accuracy:
+                    break
+        # terminal eval: the loop can exit between eval points (budget
+        # exhausted off-cadence) — always record the true final state.
+        if not hist.rounds or hist.rounds[-1] != upd:
+            acc = self.trainer.evaluate(params)
+            hist.record(time=clock, rnd=upd, acc=acc,
+                        n_selected=self.cohort_sizes[-1]
+                        if self.cohort_sizes else 0)
+        hist.meta["mean_cohort"] = (float(np.mean(self.cohort_sizes))
+                                    if self.cohort_sizes else 0.0)
+        hist.meta["n_drains"] = len(self.cohort_sizes)
+        return hist
+
+
+def run_feddct_async(trainer, network, fl: FLConfig, *,
+                     engine: str = "batched", use_kernel_agg: bool = False,
+                     verbose: bool = False, eval_every: int = 1
+                     ) -> RunHistory:
+    """Semi-async FedDCT: tier timeouts become aggregation windows.
+
+    Per round: dynamic tiering + CSTT selection exactly as the sync
+    scheduler (over clients not currently in flight), but selected
+    clients are pushed as completion events and the round drains every
+    completion inside ``deadline = max_k min(D_max^k, Omega)`` (Eq. 7
+    as a window, Eq. 5/6 as the clock advance).  Clients that miss the
+    window stay in flight — merged later with a staleness-discounted
+    alpha instead of being dropped, so no local work is ever wasted
+    (there is no re-evaluation lane: the merge itself refreshes the
+    client's running-average time).
+    """
+    rng = np.random.default_rng(fl.seed + 19)
+    hist = RunHistory(method="feddct_async", arch=trainer.cfg.arch_id,
+                      meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                            "beta": fl.beta, "kappa": fl.kappa,
+                            "omega": fl.omega, "tau": fl.tau,
+                            "n_tiers": fl.n_tiers, "engine": engine,
+                            "alpha": fl.async_alpha, "a": fl.async_a})
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
+    params = trainer.init_params(fl.seed)
+    clock = 0.0
+
+    # initial kappa-round evaluation of every client (parallel), exactly
+    # like the sync scheduler
+    at: Dict[int, float] = {}
+    ct: Dict[int, int] = {}
+    setup_times = []
+    for c in range(fl.n_clients):
+        t_avg, spent = evaluate_client(network, c, rnd=0, kappa=fl.kappa,
+                                       omega=fl.omega)
+        at[c] = t_avg
+        ct[c] = 0
+        setup_times.append(spent)
+    clock += max(setup_times)
+
+    q = EventQueue()
+    snapshots: Dict[int, object] = {}
+    inflight: Dict[int, int] = {}          # client -> tier at selection
+    version = 0
+    t_ptr = 1
+    v_curr = v_prev = 0.0
+    m = max(fl.n_clients // fl.n_tiers, 1)
+    cohort_sizes: List[int] = []
+
+    for rnd in range(1, fl.rounds + 1):
+        avail_at = {c: v for c, v in at.items() if c not in inflight}
+        deadline = clock + fl.omega
+        n_sel = 0
+        if avail_at:
+            tiers = tiering(avail_at, m)
+            selected, d_max, t_ptr = cstt(
+                t_ptr, v_prev, v_curr, tiers, avail_at, ct, fl.tau,
+                fl.beta, fl.omega, rng)
+            sts = network.delays([c for c, _ in selected], rnd)
+            used = set()
+            for (c, k), st in zip(selected, sts):
+                q.push(ClientEvent(clock + float(st), c, version, rnd,
+                                   cost=float(st)))
+                snapshots[c] = params
+                inflight[c] = k
+                used.add(k)
+            if used:
+                deadline = clock + max(min(d_max[k], fl.omega)
+                                       for k in used)
+            n_sel = len(selected)
+
+        batch = AggregationBuffer.drain_until(q, deadline)
+        if batch:
+            params = _merge_window(eng, params, snapshots, batch, fl,
+                                   version)
+            version += len(batch)
+            cohort_sizes.append(len(batch))
+            for e in batch:
+                at[e.client] = update_avg_time(at[e.client], ct[e.client],
+                                               e.cost)
+                ct[e.client] += 1
+                inflight.pop(e.client, None)
+                snapshots.pop(e.client, None)
+
+        # Eq. 5/6 window close: last arrival if everyone made it, the
+        # full deadline if stragglers are still in flight.
+        clock = deadline if q else (batch[-1].finish if batch else deadline)
+
+        if rnd % eval_every == 0:
+            v_now = trainer.evaluate(params)
+            hist.record(time=clock, rnd=rnd, acc=v_now, tier=t_ptr,
+                        n_selected=n_sel, n_stragglers=len(q))
+            v_prev, v_curr = v_curr, v_now
+            if verbose:
+                print(f"[feddct_async] r={rnd:4d} t={clock:9.1f}s "
+                      f"tier={t_ptr} acc={v_now:.4f} merged="
+                      f"{len(batch)} inflight={len(q)}")
+            if fl.target_accuracy and v_now >= fl.target_accuracy:
+                break
+    if not hist.rounds or hist.rounds[-1] != rnd:
+        hist.record(time=clock, rnd=rnd, acc=trainer.evaluate(params),
+                    tier=t_ptr, n_stragglers=len(q))
+    hist.meta["mean_cohort"] = (float(np.mean(cohort_sizes))
+                                if cohort_sizes else 0.0)
+    hist.meta["n_drains"] = len(cohort_sizes)
+    return hist

@@ -1,0 +1,384 @@
+"""Event-driven async runtime: deterministic event ordering, windowed
+buffer draining, staleness-weighted fused aggregation, and history
+equivalence of ``run_fedasync(window=0)`` vs the legacy sequential
+loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.config.base import FLConfig
+from repro.core.aggregation import (staleness_merge,
+                                    staleness_merge_coefficients,
+                                    staleness_weighted_merge)
+from repro.core.baselines import (run_fedasync, run_fedasync_sequential,
+                                  run_fedbuff)
+from repro.core.engine import make_engine
+from repro.fl.client import CNNTrainer
+from repro.fl.network import WirelessNetwork
+from repro.kernels import fedagg_pytree
+from repro.kernels.ref import fedagg_ref
+from repro.runtime import (AggregationBuffer, AsyncRunner, ClientEvent,
+                           EventQueue)
+from repro.runtime.async_loop import run_feddct_async
+
+
+_TRAINER_CACHE = {}
+
+
+def _setup(mu=0.0, rounds=2, n_clients=8, seed=0, lr=0.003):
+    fl = FLConfig(n_clients=n_clients, n_tiers=4, tau=2, rounds=rounds,
+                  mu=mu, primary_frac=0.7, seed=seed, lr=lr)
+    net = WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                          fl.mu, fl.failure_delay, fl.seed)
+    key = (n_clients, seed, lr)
+    if key not in _TRAINER_CACHE:
+        _TRAINER_CACHE[key] = CNNTrainer(get_arch("cnn-mnist").reduced(),
+                                         fl, "mnist", scale=0.01)
+    return _TRAINER_CACHE[key], net, fl
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_finish_time():
+    q = EventQueue()
+    for t, c in [(5.0, 1), (2.0, 4), (9.0, 0), (3.5, 2)]:
+        q.push(ClientEvent(t, c))
+    assert [q.pop().client for _ in range(4)] == [4, 2, 1, 0]
+
+
+def test_event_queue_ties_break_on_client_id_not_insertion_order():
+    for order in ([3, 1, 2, 0], [0, 1, 2, 3], [2, 0, 3, 1]):
+        q = EventQueue()
+        for c in order:
+            q.push(ClientEvent(7.0, c, version=c, rnd=c))
+        assert [q.pop().client for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_event_queue_payload_does_not_affect_order():
+    q = EventQueue([ClientEvent(1.0, 5, version=9, rnd=9, cost=99.0),
+                    ClientEvent(1.0, 3, version=0, rnd=0, cost=0.0)])
+    assert q.peek().client == 3
+    assert len(q) == 2 and bool(q)
+
+
+# ---------------------------------------------------------------------------
+# aggregation buffer
+# ---------------------------------------------------------------------------
+
+def _queue(times):
+    return EventQueue([ClientEvent(t, c) for c, t in enumerate(times)])
+
+
+def test_buffer_window0_is_one_at_a_time():
+    q = _queue([1.0, 2.0, 3.0])
+    buf = AggregationBuffer()
+    drains = []
+    while q:
+        drains.append([e.client for e in buf.drain(q)])
+    assert drains == [[0], [1], [2]]
+
+
+def test_buffer_count_window_waits_for_k():
+    q = _queue([1.0, 2.0, 30.0, 40.0])
+    buf = AggregationBuffer(window=3)
+    assert [e.client for e in buf.drain(q)] == [0, 1, 2]
+    assert [e.client for e in buf.drain(q)] == [3]
+
+
+def test_buffer_time_window_anchors_on_earliest():
+    q = _queue([1.0, 5.0, 6.9, 20.0])
+    buf = AggregationBuffer(window_secs=6.0)
+    assert [e.client for e in buf.drain(q)] == [0, 1, 2]   # <= 1.0 + 6
+    assert [e.client for e in buf.drain(q)] == [3]
+
+
+def test_buffer_limit_caps_the_drain():
+    q = _queue([1.0, 1.1, 1.2, 1.3])
+    buf = AggregationBuffer(window_secs=10.0)
+    assert len(buf.drain(q, limit=2)) == 2
+    assert len(buf.drain(q, limit=10)) == 2
+
+
+def test_buffer_drain_until_external_deadline():
+    q = _queue([1.0, 2.0, 3.0, 9.0])
+    got = AggregationBuffer.drain_until(q, deadline=3.0)
+    assert [e.client for e in got] == [0, 1, 2]
+    assert AggregationBuffer.drain_until(q, deadline=3.0) == []
+    assert len(q) == 1
+
+
+def test_buffer_rejects_negative_windows():
+    with pytest.raises(ValueError):
+        AggregationBuffer(window=-1)
+
+
+def test_buffer_close_time_semantics():
+    # time-closed window: the server must wait out the full deadline
+    # (it cannot know nothing else is coming) -> anchor + window_secs
+    q = _queue([1.0, 3.0, 20.0])
+    buf = AggregationBuffer(window_secs=6.0)
+    batch = buf.drain(q)
+    assert buf.close_time(batch) == 1.0 + 6.0
+    # count-closed window (K-th arrival lands): closes at last arrival
+    q = _queue([1.0, 3.0, 4.0, 20.0])
+    buf = AggregationBuffer(window=3, window_secs=50.0)
+    batch = buf.drain(q)
+    assert len(batch) == 3 and buf.close_time(batch) == 4.0
+    # sequential (window=0): closes at the event itself
+    q = _queue([2.5])
+    buf = AggregationBuffer()
+    batch = buf.drain(q)
+    assert buf.close_time(batch) == 2.5
+
+
+# ---------------------------------------------------------------------------
+# vectorized wireless delays
+# ---------------------------------------------------------------------------
+
+def test_delays_bitwise_equal_scalar_path():
+    net = WirelessNetwork(20, (5, 10, 15, 20, 25), 2.0, 0.3, (30, 60),
+                          seed=11)
+    for rnd in (0, 7, 12345):
+        got = net.delays(np.arange(20), rnd)
+        want = np.asarray([net.delay(c, rnd) for c in range(20)])
+        assert np.array_equal(got, want)
+
+
+def test_delays_broadcasts_round_and_attempt_arrays():
+    net = WirelessNetwork(6, (5.0, 9.0), 2.0, 0.2, (30, 60), seed=3)
+    got = net.delays([4] * 5, 2, attempt=np.arange(5) + 1)
+    want = np.asarray([net.delay(4, 2, attempt=a + 1) for a in range(5)])
+    assert np.array_equal(got, want)
+    got = net.delays([0, 1, 2], np.array([5, 6, 7]))
+    want = np.asarray([net.delay(c, r) for c, r in zip([0, 1, 2],
+                                                       [5, 6, 7])])
+    assert np.array_equal(got, want)
+
+
+def test_delays_respects_scalar_override_in_subclasses():
+    class SpikeNet(WirelessNetwork):
+        def delay(self, client, rnd, attempt=0):
+            if client == 1:
+                return 1e6
+            return super().delay(client, rnd, attempt)
+
+    net = SpikeNet(4, (5.0,), 2.0, 0.0, (30, 60), seed=0)
+    got = net.delays([0, 1, 2, 3], 5)
+    assert got[1] == 1e6
+    base = WirelessNetwork(4, (5.0,), 2.0, 0.0, (30, 60), seed=0)
+    assert np.array_equal(np.delete(got, 1),
+                          np.delete(base.delays([0, 1, 2, 3], 5), 1))
+
+
+def test_delays_empty_cohort():
+    net = WirelessNetwork(4, (5.0,), 2.0, 0.0, (30, 60), seed=0)
+    assert net.delays([], 0).shape == (0,)
+
+
+def test_delays_negative_seed_falls_back_to_exact_path():
+    # a negative base seed makes some per-element seeds negative, where
+    # int64->uint64 wrapping would diverge from the scalar mod-2**63
+    # path; the lo-bound guard must route those through delay()
+    net = WirelessNetwork(200, (5.0, 9.0), 2.0, 0.2, (30, 60), seed=-1)
+    got = net.delays(np.arange(200), 0)
+    want = np.asarray([net.delay(c, 0) for c in range(200)])
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# staleness-weighted fused aggregation
+# ---------------------------------------------------------------------------
+
+def _rand_tree(rng, n):
+    return {"w": jnp.asarray(rng.normal(size=(n, 4, 3)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32)
+                             ).astype(jnp.bfloat16)}
+
+
+def _row(tree, i):
+    return jax.tree_util.tree_map(lambda l: l[i], tree)
+
+
+@pytest.mark.parametrize("alphas", [
+    [0.6], [0.5, 0.25], [0.9, 0.0, 0.3], [0.2, 1.0, 0.4], [0.0, 0.0]])
+def test_staleness_weighted_merge_matches_sequential_fold(alphas):
+    rng = np.random.default_rng(len(alphas))
+    n = len(alphas)
+    g = _row(_rand_tree(rng, 1), 0)
+    stacked = _rand_tree(rng, n)
+    want = g
+    for i, a in enumerate(alphas):
+        want = staleness_merge(want, _row(stacked, i), a)
+    got = staleness_weighted_merge(g, stacked, alphas)
+    for k in g:
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float32), np.asarray(want[k], np.float32),
+            rtol=2e-2 if g[k].dtype == jnp.bfloat16 else 1e-5,
+            atol=2e-2 if g[k].dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_staleness_merge_coefficients_are_convex():
+    for alphas in ([0.6], [0.5, 0.25, 0.1], [1.0, 0.5], [0.0, 0.0]):
+        coef = staleness_merge_coefficients(alphas)
+        assert coef.shape == (len(alphas) + 1,)
+        np.testing.assert_allclose(coef.sum(), 1.0, rtol=1e-6)
+        assert (coef >= 0).all()
+
+
+def test_staleness_weighted_merge_kernel_path_matches_jnp():
+    rng = np.random.default_rng(0)
+    g = _row(_rand_tree(rng, 1), 0)
+    stacked = _rand_tree(rng, 3)
+    alphas = [0.7, 0.0, 0.4]
+    a = staleness_weighted_merge(g, stacked, alphas, use_kernel=False)
+    b = staleness_weighted_merge(g, stacked, alphas, use_kernel=True,
+                                 interpret=True)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(a[k], np.float32),
+                                   np.asarray(b[k], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_fedagg_alpha_vector_kernel_matches_ref():
+    rng = np.random.default_rng(5)
+    u = jnp.asarray(rng.normal(size=(5, 403)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=5).astype(np.float32))
+    a = jnp.asarray([1.0, 0.3, 0.0, 2.0, 0.7], jnp.float32)
+    from repro.kernels import fedagg_op
+    got = fedagg_op(u, w, alphas=a, block_p=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(fedagg_ref(u, w, a)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fedagg_zero_alpha_rows_masked_even_nonfinite():
+    stacked = {"w": jnp.asarray([[1.0, 2.0], [np.nan, np.inf], [3.0, 4.0]],
+                                jnp.float32)}
+    w = jnp.ones(3)
+    a = jnp.asarray([1.0, 0.0, 1.0])
+    out = fedagg_pytree(stacked, w, alphas=a, interpret=True)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 3.0], rtol=1e-6)
+    ref = fedagg_ref(stacked["w"], w, a)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fake trainer: runtime mechanics without jit-compile cost
+# ---------------------------------------------------------------------------
+
+class FakeAsyncTrainer:
+    """Deterministic linear updates; supports the looped cohort
+    fallback (no local_train_batch/local_train_cohort)."""
+
+    class cfg:
+        arch_id = "fake"
+
+    def init_params(self, seed=0):
+        return {"w": jnp.zeros(3, jnp.float32)}
+
+    def local_train(self, params, client_id, rnd_seed):
+        return {"w": params["w"] + (client_id + 1.0)}, 10.0 + client_id
+
+    def evaluate(self, params):
+        return float(np.clip(np.mean(np.asarray(params["w"])) / 100.0,
+                             0.0, 1.0))
+
+
+def test_async_runner_window0_budget_and_terminal_eval():
+    fl = FLConfig(n_clients=4, tau=2, rounds=3, seed=0)
+    net = WirelessNetwork(4, (5.0, 10.0), 2.0, 0.0, (30, 60), seed=0)
+    r = AsyncRunner(FakeAsyncTrainer(), net, fl, eval_every=4)
+    hist = r.run()
+    assert sum(r.cohort_sizes) == fl.rounds * fl.tau
+    assert all(s == 1 for s in r.cohort_sizes)
+    # eval cadence 4 with budget 6 -> records at 4 and a terminal at 6
+    assert hist.rounds == [4, 6]
+    assert hist.times == sorted(hist.times)
+
+
+def test_async_runner_windowed_drains_multi_client_cohorts():
+    fl = FLConfig(n_clients=6, tau=3, rounds=4, seed=1)
+    net = WirelessNetwork(6, (5.0, 10.0), 2.0, 0.0, (30, 60), seed=1)
+    r = AsyncRunner(FakeAsyncTrainer(), net, fl, window_secs=30.0,
+                    eval_every=5)
+    hist = r.run()
+    assert sum(r.cohort_sizes) == fl.rounds * fl.tau
+    assert hist.meta["mean_cohort"] > 1.0
+    assert max(r.cohort_sizes) > 1
+    assert hist.rounds[-1] == fl.rounds * fl.tau     # terminal eval
+    assert hist.times == sorted(hist.times)
+
+
+def test_async_runner_count_window_matches_fedbuff_goal():
+    fl = FLConfig(n_clients=6, tau=2, rounds=4, seed=2)
+    net = WirelessNetwork(6, (5.0,), 2.0, 0.0, (30, 60), seed=2)
+    hist = run_fedbuff(FakeAsyncTrainer(), net, fl, window=2, eval_every=8)
+    assert hist.meta["window"] == 2
+    assert hist.meta["mean_cohort"] == 2.0
+
+
+def test_feddct_async_carries_stragglers_instead_of_dropping():
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                  seed=3, beta=1.1)
+    net = WirelessNetwork(8, fl.tier_delay_means, fl.delay_std, fl.mu,
+                          fl.failure_delay, fl.seed)
+    hist = run_feddct_async(FakeAsyncTrainer(), net, fl)
+    assert hist.rounds == list(range(1, 7))
+    assert hist.times == sorted(hist.times)
+    # windows merged something over the run, and at least one round had
+    # in-flight stragglers carried over rather than dropped
+    assert hist.meta["n_drains"] >= 1
+    assert sum(hist.n_stragglers) >= 1
+
+
+# ---------------------------------------------------------------------------
+# history equivalence: runtime window=0 == legacy sequential fedasync
+# ---------------------------------------------------------------------------
+
+def _hist_equal(ha, hb):
+    assert ha.rounds == hb.rounds
+    assert ha.times == hb.times
+    assert ha.accuracy == hb.accuracy
+    assert ha.n_selected == hb.n_selected
+
+
+def test_fedasync_window0_history_identical_to_sequential():
+    tr, net, fl = _setup()
+    hs = run_fedasync_sequential(tr, net, fl, eval_every=3)
+    tr2, net2, fl2 = _setup()
+    hr = run_fedasync(tr2, net2, fl2, window=0, eval_every=3)
+    _hist_equal(hs, hr)
+    # budget 4 with cadence 3: both end on a terminal eval at update 4
+    assert hr.rounds[-1] == fl.rounds * fl.tau
+
+
+def test_engine_train_cohort_matches_per_client_snapshots():
+    """Cohort rows must equal training each client separately from its
+    own start params with its own seed (the async-window contract)."""
+    tr, _, fl = _setup()
+    eng = make_engine(tr)
+    p0 = tr.init_params(0)
+    p1 = tr.init_params(1)
+    stacked, sizes = eng.train_cohort([p0, p1], [0, 3], [11, 22])
+    for i, (start, c, s) in enumerate([(p0, 0, 11), (p1, 3, 22)]):
+        solo, solo_sizes = eng.train_clients(start, [c], s)
+        for a, b in zip(jax.tree_util.tree_leaves(_row(stacked, i)),
+                        jax.tree_util.tree_leaves(_row(solo, 0))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+        assert sizes[i] == solo_sizes[0]
+
+
+@pytest.mark.slow
+def test_fedasync_windowed_cnn_integration():
+    tr, net, fl = _setup(rounds=3)
+    hist = run_fedasync(tr, net, fl, window_secs=15.0, eval_every=4)
+    assert hist.meta["mean_cohort"] > 1.0
+    assert hist.rounds[-1] == fl.rounds * fl.tau
+    assert all(0.0 <= a <= 1.0 for a in hist.accuracy)
