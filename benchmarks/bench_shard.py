@@ -1,0 +1,151 @@
+"""A/B harness: client-sharded vs single-device cohort train+aggregate.
+
+    XLA is told to split the host CPU into N devices BEFORE jax loads
+    (--devices, default 8, appended to XLA_FLAGS via
+    repro.distributed.hostdevices — an operator-exported forced count
+    wins), then the SAME 16-client cohort (per-client snapshots, seeds,
+    nonuniform staleness alphas) runs train_cohort + staleness merge
+    through client meshes of size 1 / 2 / 8 carved from those devices.
+
+    PYTHONPATH=src python benchmarks/bench_shard.py [--devices 8]
+        [--cohort 16] [--reps 3] [--smoke]
+
+Every arm must produce the same merged global params (the mesh-size-1
+arm — the plain single-device engine — is the reference; parity is
+asserted within float tolerance, nonuniform alphas and a zero-weight
+straggler row included).  Per arm we report train+merge wall-clock
+after a warmup rep.
+
+Honest numbers note: forcing N host devices on a smaller physical core
+count oversubscribes the CPU, so the sharded arms are NOT expected to
+win wall-clock here — the harness exists to prove the distributed path
+computes the same answer while the cohort's device footprint drops to
+cohort/N rows per device.  (Real speedups need real devices; same
+caveat as the interpret-mode Pallas kernels.)  ``--smoke`` is the
+CI-gated < 30 s variant: it fails unless every sharded arm matches the
+single-device reference and the largest mesh actually sharded
+(mesh size > 1).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _early_int_flag(name: str, default: int) -> int:
+    """Parse one integer flag from argv before argparse (and before jax
+    locks the device count)."""
+    for i, a in enumerate(sys.argv):
+        if a == name and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith(name + "="):
+            return int(a.split("=", 1)[1])
+    return default
+
+
+from repro.distributed.hostdevices import ensure_host_device_count
+
+ensure_host_device_count(_early_int_flag("--devices", 8))
+
+import jax                                               # noqa: E402
+import numpy as np                                       # noqa: E402
+
+from repro.config import get_arch                        # noqa: E402
+from repro.config.base import FLConfig                   # noqa: E402
+from repro.core.engine import make_engine                # noqa: E402
+from repro.distributed import make_client_mesh           # noqa: E402
+from repro.fl.client import CNNTrainer                   # noqa: E402
+
+
+def run_arm(trainer, fl, mesh_size: int, starts, ids, seeds, alphas,
+            reps: int):
+    eng = make_engine(trainer, mesh=make_client_mesh(mesh_size))
+    g = trainer.init_params(fl.seed)
+
+    def once():
+        stacked, _ = eng.train_cohort(starts, ids, seeds)
+        merged = eng.merge_staleness(g, stacked, alphas)
+        jax.block_until_ready(merged)
+        return merged
+
+    merged = once()                    # warmup rep: compile + first run
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        merged = once()
+    wall = (time.perf_counter() - t0) / max(reps, 1)
+    return merged, {"mesh": mesh_size, "wall_s": wall,
+                    "rows_per_device": -(-len(ids) // mesh_size),
+                    "engine": type(eng).__name__}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count (consumed before jax "
+                         "init; an exported XLA_FLAGS forced count wins)")
+    ap.add_argument("--cohort", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (< 30 s): parity gate only")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.cohort, args.clients, args.reps = 16, 16, 1
+
+    n_dev = len(jax.devices())
+    mesh_sizes = sorted({m for m in (1, 2, 8) if m <= n_dev} | {1})
+    print(f"[bench_shard] {n_dev} host devices; arms: mesh {mesh_sizes}")
+
+    fl = FLConfig(n_clients=args.clients, n_tiers=4, tau=4, rounds=2,
+                  mu=0.0, primary_frac=0.7, seed=args.seed, lr=0.003)
+    trainer = CNNTrainer(get_arch("cnn-mnist").reduced(), fl, "mnist",
+                         scale=0.01)
+    ids = [c % fl.n_clients for c in range(args.cohort)]
+    seeds = [7 * c + 1 for c in range(args.cohort)]
+    starts = [trainer.init_params(c % 3) for c in ids]
+    # PR 2 staleness weights, nonuniform, with one zero-alpha straggler
+    alphas = 0.6 * (np.arange(args.cohort, dtype=np.float64) + 1.0) ** -0.5
+    alphas[min(3, args.cohort - 1)] = 0.0
+
+    results, merged = {}, {}
+    for m in mesh_sizes:
+        merged[m], rec = run_arm(trainer, fl, m, starts, ids, seeds,
+                                 alphas, args.reps)
+        results[f"mesh{m}"] = rec
+        print(f"[mesh={m}] {rec['engine']:>20s}  "
+              f"rows/device={rec['rows_per_device']:2d}  "
+              f"train+merge={rec['wall_s']:6.2f}s")
+
+    ref = merged[1]
+    max_err, parity_ok = 0.0, True
+    for m in mesh_sizes[1:]:
+        for a, b in zip(jax.tree_util.tree_leaves(merged[m]),
+                        jax.tree_util.tree_leaves(ref)):
+            err = float(np.max(np.abs(np.asarray(a, np.float32)
+                                      - np.asarray(b, np.float32))))
+            max_err = max(max_err, err)
+            parity_ok &= err <= 1e-4
+    results["max_abs_err_vs_mesh1"] = max_err
+    results["parity_ok"] = parity_ok
+    print(f"[bench_shard] max |sharded - single-device| = {max_err:.2e} "
+          f"({'OK' if parity_ok else 'MISMATCH'})")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"[bench_shard] results -> {args.out}")
+    if args.smoke:
+        ok = parity_ok and max(mesh_sizes) > 1
+        print(f"[bench_shard] smoke {'PASS' if ok else 'FAIL'}")
+        raise SystemExit(0 if ok else 1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

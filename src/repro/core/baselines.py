@@ -40,12 +40,13 @@ from repro.fl.metrics import RunHistory
 
 def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                engine: str = "batched", verbose: bool = False,
-               eval_every: int = 1) -> RunHistory:
+               eval_every: int = 1, mesh=None) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 11)
     hist = RunHistory(method="fedavg", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "engine": engine})
-    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
+                      mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     for rnd in range(1, fl.rounds + 1):
@@ -68,12 +69,13 @@ def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
 
 def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
              engine: str = "batched", verbose: bool = False,
-             eval_every: int = 1) -> RunHistory:
+             eval_every: int = 1, mesh=None) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 13)
     hist = RunHistory(method="tifl", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "engine": engine})
-    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
+                      mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
 
@@ -196,7 +198,7 @@ def run_fedasync_sequential(trainer, network, fl: FLConfig, *,
 def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
                  use_kernel_agg: bool = False, verbose: bool = False,
                  eval_every: int = 5, window: int = 0,
-                 window_secs: float = 0.0) -> RunHistory:
+                 window_secs: float = 0.0, mesh=None) -> RunHistory:
     """FedAsync on the event-driven runtime.
 
     ``window=0`` (default) reproduces the sequential one-merge-per-event
@@ -209,20 +211,22 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
     return AsyncRunner(trainer, network, fl, method="fedasync",
                        engine=engine, use_kernel_agg=use_kernel_agg,
                        window=window, window_secs=window_secs,
-                       eval_every=eval_every, verbose=verbose).run()
+                       eval_every=eval_every, verbose=verbose,
+                       mesh=mesh).run()
 
 
 def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                 use_kernel_agg: bool = False, verbose: bool = False,
                 eval_every: int = 5, window: int = 0,
-                window_secs: float = 0.0) -> RunHistory:
+                window_secs: float = 0.0, mesh=None) -> RunHistory:
     """FedBuff [Nguyen'22]: async with a K-completion aggregation goal
     (default K = fl.tau, the sync methods' per-round cohort size)."""
     from repro.runtime.async_loop import AsyncRunner
     return AsyncRunner(trainer, network, fl, method="fedbuff",
                        engine=engine, use_kernel_agg=use_kernel_agg,
                        window=window or fl.tau, window_secs=window_secs,
-                       eval_every=eval_every, verbose=verbose).run()
+                       eval_every=eval_every, verbose=verbose,
+                       mesh=mesh).run()
 
 
 def run_feddct_async(trainer, network, fl: FLConfig, **kw) -> RunHistory:
@@ -243,7 +247,8 @@ def run_method(method: str, trainer, network, fl: FLConfig, **kw
 
 def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
                 use_kernel_agg: bool = False, engine: str = "batched",
-                verbose: bool = False, eval_every: int = 1) -> RunHistory:
+                verbose: bool = False, eval_every: int = 1,
+                mesh=None) -> RunHistory:
     """FedProx [Li et al. 2020]: FedAvg + proximal term pulling local
     models toward the global model (extra baseline beyond the paper).
 
@@ -258,7 +263,8 @@ def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
     hist = RunHistory(method="fedprox", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "prox_mu": prox_mu,
                             "engine": engine})
-    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
+                      mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     blend = 1.0 / (1.0 + prox_mu * 10)

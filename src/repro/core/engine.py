@@ -53,14 +53,27 @@ class BatchedClientEngine:
                             and hasattr(trainer, "local_train_cohort"))
 
     # -- local training -------------------------------------------------
+    def _pad_target(self, n: int) -> int:
+        """Padded cohort size for ``n`` clients (subclass hook: the
+        sharded engine also rounds up to a mesh multiple)."""
+        return 1 << (n - 1).bit_length()
+
     def _pad_pow2(self, *lists):
-        """Pad parallel per-client lists up to the next power of two by
+        """Pad parallel per-client lists up to ``_pad_target`` by
         repeating their last element (see ``pad_cohorts``)."""
         if not self.pad_cohorts:
             return lists
         n = len(lists[0])
-        target = 1 << (n - 1).bit_length()
+        target = self._pad_target(n)
         return tuple(l + [l[-1]] * (target - n) for l in lists)
+
+    def _local_train_batch(self, params, ids, rnd_seed):
+        """Trainer dispatch hook (the sharded engine injects its
+        ``wrap`` here)."""
+        return self.trainer.local_train_batch(params, ids, rnd_seed)
+
+    def _local_train_cohort(self, stacked_starts, ids, seeds):
+        return self.trainer.local_train_cohort(stacked_starts, ids, seeds)
 
     def train_clients(self, params, client_ids: Sequence[int],
                       rnd_seed: int):
@@ -73,7 +86,7 @@ class BatchedClientEngine:
             n = len(ids)
             (run_ids,) = self._pad_pow2(ids)
             try:
-                stacked, sizes = self.trainer.local_train_batch(
+                stacked, sizes = self._local_train_batch(
                     params, run_ids, rnd_seed)
                 if len(run_ids) != n:
                     stacked = jax.tree_util.tree_map(
@@ -111,7 +124,7 @@ class BatchedClientEngine:
             stacked_starts = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *run_starts)
             try:
-                stacked, sizes = self.trainer.local_train_cohort(
+                stacked, sizes = self._local_train_cohort(
                     stacked_starts, run_ids, run_seeds)
                 if len(run_ids) != n:
                     stacked = jax.tree_util.tree_map(
@@ -164,11 +177,28 @@ class BatchedClientEngine:
 
 def make_engine(trainer, *, use_kernel_agg: bool = False,
                 engine: str = "batched",
-                interpret: Optional[bool] = None) -> BatchedClientEngine:
+                interpret: Optional[bool] = None,
+                mesh=None) -> BatchedClientEngine:
     """``engine``: "batched" (default) or "looped" (reference path for
-    equivalence tests and A/B benchmarks)."""
+    equivalence tests and A/B benchmarks).
+
+    ``mesh``: a 1-D client mesh (``repro.distributed.make_client_mesh``)
+    to shard cohorts across devices.  ``None`` or a single-device mesh
+    selects the plain single-device engine — with one device the
+    distributed path IS today's engine, so histories stay bit-identical
+    by construction; a multi-device mesh returns the shard_map-backed
+    ``ShardedClientEngine``.
+    """
     if engine not in ("batched", "looped"):
         raise ValueError(f"unknown engine {engine!r}")
+    if mesh is not None and int(mesh.size) > 1:
+        if engine == "looped":
+            raise ValueError("the looped reference engine cannot shard; "
+                             "use engine='batched' with a client mesh")
+        from repro.distributed.engine import ShardedClientEngine
+        return ShardedClientEngine(trainer, mesh,
+                                   use_kernel_agg=use_kernel_agg,
+                                   interpret=interpret)
     return BatchedClientEngine(trainer, use_kernel_agg=use_kernel_agg,
                                interpret=interpret,
                                force_looped=(engine == "looped"))

@@ -36,14 +36,15 @@ from repro.fl.metrics import RunHistory
 
 def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                engine: str = "batched", verbose: bool = False,
-               eval_every: int = 1) -> RunHistory:
+               eval_every: int = 1, mesh=None) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 7)
     hist = RunHistory(method="feddct", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
                             "omega": fl.omega, "tau": fl.tau,
                             "n_tiers": fl.n_tiers, "engine": engine})
-    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
+                      mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
 

@@ -1,0 +1,44 @@
+"""Client-sharded distributed execution subsystem.
+
+Shards FL cohorts over a 1-D ``("clients",)`` device mesh:
+``make_client_mesh`` builds the mesh, ``ClientShardingPlan`` pads
+cohorts to mesh multiples with exact-no-op rows, ``shard_cohort_train``
+runs local epochs under ``shard_map`` with zero cross-device traffic,
+and ``sharded_aggregate`` / ``sharded_staleness_merge`` reduce
+per-shard partial sums into one psum.  ``ShardedClientEngine`` packages
+it all behind the ``BatchedClientEngine`` interface; schedulers select
+it via ``make_engine(..., mesh=...)``.
+
+Lazy exports: ``hostdevices`` (env plumbing, importable before jax
+backend init) loads eagerly; everything touching jax loads on first
+attribute access so entry points can still order ``XLA_FLAGS`` setup
+before device initialization.
+"""
+
+from repro.distributed.hostdevices import (ensure_host_device_count,
+                                           forced_host_device_count)
+
+_LAZY = {
+    "CLIENT_AXIS": "mesh",
+    "make_client_mesh": "mesh",
+    "ClientShardingPlan": "plan",
+    "sharded_aggregate": "aggregate",
+    "sharded_staleness_merge": "aggregate",
+    "ShardedClientEngine": "engine",
+    "shard_cohort_train": "engine",
+}
+
+__all__ = ["ensure_host_device_count", "forced_host_device_count",
+           *sorted(_LAZY)]
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

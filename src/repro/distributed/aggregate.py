@@ -1,0 +1,103 @@
+"""Client-sharded server aggregation: per-shard partial sums + one psum.
+
+The single-device hot path (``weighted_average_stacked`` /
+``fedagg_pytree``) reduces the whole flattened (N, P) update buffer on
+one device.  Here each shard reduces only its own rows —
+``sum_shard eff_c * u_c`` and ``sum_shard eff_c`` — and a single
+``psum`` pair across the ``clients`` axis produces the global weighted
+average.  That is the entire cross-device traffic of a round: one (P,)
+all-reduce plus one scalar.
+
+Numerics: identical masking semantics to the reference (rows with
+``eff_c = w_c * alpha_c <= 0`` contribute exactly nothing; an
+all-masked cohort yields zeros), equal up to float reassociation —
+partial sums reduce per-shard before the psum, so results match the
+single-device reduction within dtype tolerance, not bitwise.
+``sharded_staleness_merge`` rides the same reduction with the PR 2
+staleness coefficients (global model as row 0), exactly like
+``staleness_weighted_merge`` does on one device.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.aggregation import staleness_merge_coefficients
+from repro.distributed.plan import ClientShardingPlan
+from repro.kernels.ops import flatten_updates, unflatten_result
+
+# mesh -> jitted shard_map reduction (meshes hash by device assignment,
+# so one compiled program per distinct client mesh)
+_AGG_CACHE: Dict[object, object] = {}
+
+
+def _agg_fn(mesh):
+    fn = _AGG_CACHE.get(mesh)
+    if fn is None:
+        axis = mesh.axis_names[0]
+
+        def partial_reduce(u, w, a):
+            # u (rows/D, P) f32, w/a (rows/D,): this shard's rows only.
+            eff = w * a
+            eff = jnp.where(eff > 0.0, eff, 0.0)
+            # fused straggler/padding mask: a row with eff <= 0 is
+            # zeroed BEFORE the reduction, so nonfinite garbage in
+            # masked rows can never poison the average (the fedagg
+            # kernel convention).
+            masked = jnp.where((eff > 0.0)[:, None], u, 0.0)
+            num = jax.lax.psum(eff @ masked, axis)      # (P,)
+            den = jax.lax.psum(eff.sum(), axis)         # scalar
+            return num / jnp.maximum(den, 1e-30)
+
+        fn = jax.jit(shard_map(
+            partial_reduce, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis)), out_specs=P(),
+            check_rep=False))
+        _AGG_CACHE[mesh] = fn
+    return fn
+
+
+def sharded_aggregate(mesh, stacked, weights, *, alphas=None):
+    """Client-sharded ``weighted_average_stacked``.
+
+    ``stacked`` is a pytree whose leaves carry a leading client axis
+    (N, ...); ``weights`` (N,) and optional ``alphas`` (N,) multiply
+    into per-row effective weights.  The buffer is flattened once into
+    (N, P) f32 (cached unflatten spec — the fedagg pytree convention),
+    zero-padded to a multiple of the mesh size with zero effective
+    weight (exact no-op rows), reduced per shard, and combined by one
+    psum.  Returns the aggregated pytree with per-leaf shapes/dtypes
+    restored.
+    """
+    buf, treedef, spec = flatten_updates(stacked)
+    n = buf.shape[0]
+    w = jnp.asarray(weights, jnp.float32).reshape(-1)
+    a = (jnp.ones_like(w) if alphas is None
+         else jnp.asarray(alphas, jnp.float32).reshape(-1))
+    if w.shape[0] != n or a.shape[0] != n:
+        raise ValueError(
+            f"weights/alphas length {w.shape[0]}/{a.shape[0]} != rows {n}")
+    plan = ClientShardingPlan.for_cohort(n, mesh)
+    flat = _agg_fn(mesh)(plan.pad_stacked(buf, mode="zero"),
+                         plan.pad_weights(w), plan.pad_weights(a))
+    return unflatten_result(flat, treedef, spec)
+
+
+def sharded_staleness_merge(mesh, global_params, stacked, alphas):
+    """Client-sharded ``staleness_weighted_merge``: the async window
+    merge as one sharded reduction, global model riding as row 0 with
+    the telescoped merge coefficients (which sum to 1, so the
+    normalization inside ``sharded_aggregate`` is a no-op).  Zero-alpha
+    rows (masked stragglers) contribute exactly nothing."""
+    coef = staleness_merge_coefficients(alphas)
+    full = jax.tree_util.tree_map(
+        lambda g, s: jnp.concatenate([g[None].astype(s.dtype), s], axis=0),
+        global_params, stacked)
+    ones = np.ones(coef.shape[0], np.float32)
+    return sharded_aggregate(mesh, full, ones, alphas=coef)

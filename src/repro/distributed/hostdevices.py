@@ -1,0 +1,55 @@
+"""Forced host-device-count plumbing (``XLA_FLAGS``) — no jax imports.
+
+XLA locks the host platform device count at first backend
+initialization, so ``--xla_force_host_platform_device_count`` must be
+in ``XLA_FLAGS`` before anything runs a jax computation.  This module
+owns that env manipulation for every entry point that wants a
+multi-device CPU (``launch/dryrun.py``'s 512-chip dry-run,
+``benchmarks/bench_shard.py``'s forced-8 A/B, the distributed CI job):
+
+* ``ensure_host_device_count`` APPENDS the flag to whatever the caller
+  already has in ``XLA_FLAGS`` — other flags (dump paths, cpu options)
+  survive.  A pre-existing forced count wins: an explicit operator
+  choice is never clobbered.  (The historical bug was ``dryrun.py``
+  overwriting the whole variable at import.)
+* ``forced_host_device_count`` reports the count currently in effect,
+  which lets test collection decide whether the process is a dedicated
+  multi-device run.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import MutableMapping, Optional
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def forced_host_device_count(
+        env: Optional[MutableMapping[str, str]] = None) -> Optional[int]:
+    """The forced host device count present in ``XLA_FLAGS``, or
+    ``None`` when the flag is absent (the real device count applies)."""
+    flags = (os.environ if env is None else env).get("XLA_FLAGS", "")
+    m = re.search(re.escape(_FLAG) + r"=(\d+)", flags)
+    return int(m.group(1)) if m else None
+
+
+def ensure_host_device_count(
+        n: int, env: Optional[MutableMapping[str, str]] = None) -> int:
+    """Append ``--xla_force_host_platform_device_count=n`` to
+    ``XLA_FLAGS``, preserving existing flags.
+
+    If a forced count is already present it wins and is returned
+    unchanged.  Returns the count now in effect.  Must run before jax
+    initializes its backend (flag changes after that are ignored).
+    """
+    env = os.environ if env is None else env
+    existing = forced_host_device_count(env)
+    if existing is not None:
+        return existing
+    if n < 1:
+        raise ValueError(f"host device count must be >= 1, got {n}")
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + " " if flags else "") + f"{_FLAG}={int(n)}"
+    return int(n)

@@ -1,0 +1,108 @@
+"""Cohort padding plan for the client mesh axis.
+
+``shard_map`` requires every sharded leading axis to divide evenly by
+the mesh size, but FL cohorts are whatever the scheduler drained: N not
+divisible by the mesh, N smaller than the mesh, ragged shape buckets.
+``ClientShardingPlan`` owns the arithmetic, reusing the engine's two
+padding conventions so padded rows are exact no-ops:
+
+* **training** pads by repeating the last real row (``mode="edge"``,
+  the engine's pow2-padding convention): duplicate rows do duplicate,
+  deterministic work and are sliced off by ``unpad`` — real rows are
+  untouched because the client axis is elementwise-parallel;
+* **aggregation** pads with zero rows *and* zero weights/alphas
+  (``mode="zero"`` + ``pad_weights``): the fused straggler masking in
+  ``weighted_average_stacked`` / the fedagg kernel / the sharded psum
+  reduction zeroes any row with effective weight <= 0, so padded rows
+  contribute exactly nothing to the merge.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.mesh import CLIENT_AXIS
+
+
+@dataclass(frozen=True)
+class ClientShardingPlan:
+    """How a cohort of ``n`` client rows lands on a ``mesh_size``-way
+    client mesh: padded to ``padded_n`` (a multiple of the mesh size,
+    >= the mesh size)."""
+
+    n: int
+    mesh_size: int
+    padded_n: int
+    axis: str = CLIENT_AXIS
+
+    @classmethod
+    def for_cohort(cls, n: int, mesh: Union[int, "jax.sharding.Mesh"], *,
+                   pow2: bool = False) -> "ClientShardingPlan":
+        """Plan for ``n`` rows over ``mesh`` (a Mesh or a raw size).
+
+        ``pow2=True`` first rounds ``n`` up to the next power of two —
+        the engine's retrace-bounding convention — then up to a
+        multiple of the mesh size (for the usual power-of-two device
+        counts the second step is free once n >= mesh).
+        """
+        if isinstance(mesh, int):
+            d, axis = mesh, CLIENT_AXIS
+        else:
+            d, axis = int(mesh.size), mesh.axis_names[0]
+        if n < 1:
+            raise ValueError(f"cohort must have at least one row, got {n}")
+        if d < 1:
+            raise ValueError(f"mesh must have at least one device, got {d}")
+        m = int(n)
+        if pow2:
+            m = 1 << (m - 1).bit_length()
+        m = -(-m // d) * d
+        return cls(n=int(n), mesh_size=d, padded_n=m, axis=axis)
+
+    @property
+    def pad_rows(self) -> int:
+        return self.padded_n - self.n
+
+    def pad_stacked(self, tree, *, mode: str = "edge"):
+        """Pad every leaf's leading (client) axis up to ``padded_n``.
+
+        ``mode="edge"`` repeats the last real row (training path);
+        ``mode="zero"`` appends zero rows (aggregation path — pair with
+        ``pad_weights`` so the mask makes them exact no-ops).
+        """
+        if mode not in ("edge", "zero"):
+            raise ValueError(f"unknown pad mode {mode!r}")
+        if not self.pad_rows:
+            return tree
+
+        def pad_leaf(leaf):
+            leaf = jnp.asarray(leaf)
+            if mode == "edge":
+                fill = jnp.broadcast_to(leaf[-1:],
+                                        (self.pad_rows,) + leaf.shape[1:])
+            else:
+                fill = jnp.zeros((self.pad_rows,) + leaf.shape[1:],
+                                 leaf.dtype)
+            return jnp.concatenate([leaf, fill], axis=0)
+
+        return jax.tree_util.tree_map(pad_leaf, tree)
+
+    def pad_weights(self, vec):
+        """Zero-fill an (N,) weight/alpha vector to ``padded_n`` — the
+        zero-alpha masking convention: a padded row's effective weight
+        is 0, so the merge treats it exactly like a masked straggler."""
+        vec = jnp.asarray(vec, jnp.float32).reshape(-1)
+        if not self.pad_rows:
+            return vec
+        return jnp.concatenate(
+            [vec, jnp.zeros((self.pad_rows,), jnp.float32)])
+
+    def unpad(self, tree):
+        """Slice every leaf back to the real ``n`` rows."""
+        if not self.pad_rows:
+            return tree
+        return jax.tree_util.tree_map(lambda l: l[: self.n], tree)

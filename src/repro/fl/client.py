@@ -137,19 +137,26 @@ class CNNTrainer:
         return jax.tree_util.tree_map(
             lambda *leaves: jnp.concatenate(leaves, axis=0)[inv], *chunks)
 
-    def local_train_batch(self, params, client_ids, rnd_seed: int):
+    def local_train_batch(self, params, client_ids, rnd_seed: int, *,
+                          wrap=None):
         """Train many clients in one jitted vmapped scan.
 
         Clients whose local batch streams have differing shapes (ragged
         partitions) are bucketed by shape; each bucket is one compiled
         call.  Returns (stacked_params with leading axis len(client_ids)
         in input order, sizes array).
+
+        ``wrap`` is the distributed-engine hook: it receives the pure
+        train function plus the number of leading replicated args and
+        returns the runner to use (the client-sharded shard_map path).
         """
         sizes = np.asarray([len(self.clients[c]) for c in client_ids],
                            np.float32)
+        run = (self._batch_train if wrap is None
+               else wrap(self._batch_train_impl, 1))
         stacked = self._bucketed_train(
             [(c, rnd_seed) for c in client_ids],
-            lambda xs, ys, positions: self._batch_train(params, xs, ys))
+            lambda xs, ys, positions: run(params, xs, ys))
         return stacked, sizes
 
     # -- per-client start params (async runtime hot path) ---------------
@@ -168,22 +175,27 @@ class CNNTrainer:
             return p
         return jax.vmap(one_client)(start_params, xs, ys)
 
-    def local_train_cohort(self, start_params, client_ids, rnd_seeds):
+    def local_train_cohort(self, start_params, client_ids, rnd_seeds, *,
+                           wrap=None):
         """Async-window cohort: per-client start models AND per-client
         data-stream seeds, one jitted vmapped scan.
 
         ``start_params`` is a stacked pytree (leading axis
         len(client_ids)) of the model snapshot each client trains from;
         batch streams are identical to looping
-        ``local_train(start_i, c_i, seed_i)``.
+        ``local_train(start_i, c_i, seed_i)``.  ``wrap``: see
+        ``local_train_batch`` (every arg is per-client here, so zero
+        replicated args).
         """
         sizes = np.asarray([len(self.clients[c]) for c in client_ids],
                            np.float32)
+        run = (self._batch_train_multi if wrap is None
+               else wrap(self._batch_train_multi_impl, 0))
 
         def chunk(xs, ys, positions):
             idx = jnp.asarray(np.asarray(positions, np.int32))
             starts = jax.tree_util.tree_map(lambda l: l[idx], start_params)
-            return self._batch_train_multi(starts, xs, ys)
+            return run(starts, xs, ys)
 
         stacked = self._bucketed_train(list(zip(client_ids, rnd_seeds)),
                                        chunk)
@@ -267,9 +279,11 @@ class LMTrainer:
             return p
         return jax.vmap(one_client)(tokens)
 
-    def local_train_batch(self, params, client_ids, rnd_seed: int):
+    def local_train_batch(self, params, client_ids, rnd_seed: int, *,
+                          wrap=None):
         """One jitted vmapped scan over all clients' local epochs; batch
-        streams are identical to the looped ``local_train``."""
+        streams are identical to the looped ``local_train``.  ``wrap``
+        is the distributed-engine hook (see ``CNNTrainer``)."""
         if self._custom_step:
             raise NotImplementedError(
                 "custom step_fn (pjit) trainers use the looped path")
@@ -277,7 +291,9 @@ class LMTrainer:
             np.stack([self._batch(self.client_toks[c], rnd_seed * 131 + ep)
                       for ep in range(self.fl.local_epochs)])
             for c in client_ids])                   # (C, E, B, S)
-        stacked = self._batch_train(params, jnp.asarray(toks))
+        run = (self._batch_train if wrap is None
+               else wrap(self._batch_train_impl, 1))
+        stacked = run(params, jnp.asarray(toks))
         sizes = np.asarray([len(self.client_toks[c]) for c in client_ids],
                            np.float32)
         return stacked, sizes
@@ -295,7 +311,8 @@ class LMTrainer:
             return p
         return jax.vmap(one_client)(start_params, tokens)
 
-    def local_train_cohort(self, start_params, client_ids, rnd_seeds):
+    def local_train_cohort(self, start_params, client_ids, rnd_seeds, *,
+                           wrap=None):
         """Async-window cohort: per-client start models and per-client
         seeds; batch streams identical to looping
         ``local_train(start_i, c_i, seed_i)``."""
@@ -306,7 +323,9 @@ class LMTrainer:
             np.stack([self._batch(self.client_toks[c], s * 131 + ep)
                       for ep in range(self.fl.local_epochs)])
             for c, s in zip(client_ids, rnd_seeds)])    # (C, E, B, S)
-        stacked = self._batch_train_multi(start_params, jnp.asarray(toks))
+        run = (self._batch_train_multi if wrap is None
+               else wrap(self._batch_train_multi_impl, 0))
+        stacked = run(start_params, jnp.asarray(toks))
         sizes = np.asarray([len(self.client_toks[c]) for c in client_ids],
                            np.float32)
         return stacked, sizes

@@ -1,5 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.distributed.hostdevices import ensure_host_device_count
+
+# 512 forced host devices for the multi-pod production meshes.  This
+# APPENDS to any XLA_FLAGS the caller already exported (and an existing
+# --xla_force_host_platform_device_count wins) instead of clobbering
+# the variable — the forced-device-count CI job and local debugging
+# flags survive importing this module.  It must still run before jax
+# initializes its backend: the device count locks on first backend init.
+ensure_host_device_count(512)
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape) on the
 production meshes, record memory/cost/collective analysis.
@@ -8,10 +17,6 @@ production meshes, record memory/cost/collective analysis.
         --shape train_4k --mesh single
     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
         --out benchmarks/results/dryrun
-
-The XLA_FLAGS line above MUST precede any jax import: jax locks the
-device count on first backend init.  Nothing else in the repo sets it —
-smoke tests and benchmarks see the real single CPU device.
 """
 
 import argparse

@@ -47,6 +47,11 @@ def main(argv=None):
     ap.add_argument("--window-secs", type=float, default=0.0,
                     help="async aggregation window in virtual seconds "
                          "(fedasync/fedbuff; 0 = no time window)")
+    ap.add_argument("--mesh-clients", type=int, default=0,
+                    help="shard cohorts over a 1-D client mesh of N "
+                         "devices (0 = single-device engine; on CPU "
+                         "force devices first with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -59,6 +64,10 @@ def main(argv=None):
     trainer = build_fl_clients(args.arch, fl)
     kw = dict(verbose=True, engine=args.engine,
               use_kernel_agg=args.kernel_agg)
+    if args.mesh_clients > 0:
+        from repro.distributed import make_client_mesh
+        kw["mesh"] = make_client_mesh(args.mesh_clients)
+        print(f"[fl_train] client mesh: {kw['mesh'].size} device(s)")
     if args.method in ("fedasync", "fedbuff"):
         kw["window"] = args.window
         kw["window_secs"] = args.window_secs

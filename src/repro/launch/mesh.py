@@ -24,3 +24,12 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(min(model, n // max(data, 1)), 1)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(clients=None, *, devices=None):
+    """1-D FL client-axis mesh (the distributed engine's mesh); defined
+    in ``repro.distributed.mesh``, re-exported here so launch code has
+    a single mesh-factory module.  Pass ``devices=m.devices.flatten()``
+    to carve the client axis out of another factory's mesh."""
+    from repro.distributed.mesh import make_client_mesh as _make
+    return _make(clients, devices=devices)

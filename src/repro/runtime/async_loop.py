@@ -84,13 +84,18 @@ class AsyncRunner:
                  method: str = "fedasync", engine: str = "batched",
                  use_kernel_agg: bool = False, window: int = 0,
                  window_secs: float = 0.0, eval_every: int = 5,
-                 verbose: bool = False):
+                 verbose: bool = False, mesh=None):
         self.trainer = trainer
         self.network = network
         self.fl = fl
         self.method = method
         self.engine = engine
         self.use_kernel_agg = use_kernel_agg
+        # client mesh for the distributed engine: windowed cohorts train
+        # under shard_map and merge via the sharded psum reduction
+        # (singleton windows keep the legacy single-device merge path,
+        # preserving the window=0 history gate).
+        self.mesh = mesh
         self.buffer = AggregationBuffer(window, window_secs)
         self.eval_every = max(int(eval_every), 1)
         self.verbose = verbose
@@ -105,7 +110,7 @@ class AsyncRunner:
                   "engine": self.engine, "window": self.buffer.window,
                   "window_secs": self.buffer.window_secs})
         eng = make_engine(self.trainer, use_kernel_agg=self.use_kernel_agg,
-                          engine=self.engine)
+                          engine=self.engine, mesh=self.mesh)
         params = self.trainer.init_params(fl.seed)
         # true async: each client trains from the global model snapshot
         # taken when it STARTED (not finished) — staleness weights exist
@@ -161,8 +166,8 @@ class AsyncRunner:
 
 def run_feddct_async(trainer, network, fl: FLConfig, *,
                      engine: str = "batched", use_kernel_agg: bool = False,
-                     verbose: bool = False, eval_every: int = 1
-                     ) -> RunHistory:
+                     verbose: bool = False, eval_every: int = 1,
+                     mesh=None) -> RunHistory:
     """Semi-async FedDCT: tier timeouts become aggregation windows.
 
     Per round: dynamic tiering + CSTT selection exactly as the sync
@@ -182,7 +187,8 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                             "omega": fl.omega, "tau": fl.tau,
                             "n_tiers": fl.n_tiers, "engine": engine,
                             "alpha": fl.async_alpha, "a": fl.async_a})
-    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine)
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
+                      mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
 
