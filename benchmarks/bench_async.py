@@ -28,9 +28,9 @@ cohorts (mean cohort > 1) and beats sequential events/sec.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
+from common import add_json_arg, maybe_write_json
 from repro.config import get_arch
 from repro.config.base import FLConfig
 from repro.fl.client import CNNTrainer
@@ -64,7 +64,7 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (< 30 s); exits non-zero unless "
                          "windowed cohorts beat sequential merging")
-    ap.add_argument("--out", default=None)
+    add_json_arg(ap, "async")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -106,10 +106,7 @@ def main(argv=None):
     results["speedup"] = speedup
     print(f"[bench_async] windowed/sequential events/sec: {speedup:.2f}x")
 
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
-        print(f"[bench_async] results -> {args.out}")
+    maybe_write_json(args, "async", results)
     if args.smoke:
         ok = (results["windowed"]["mean_cohort"] > 1.0 and speedup > 1.0)
         print(f"[bench_async] smoke {'PASS' if ok else 'FAIL'}")

@@ -30,7 +30,6 @@ single-device reference and the largest mesh actually sharded
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -53,6 +52,7 @@ ensure_host_device_count(_early_int_flag("--devices", 8))
 import jax                                               # noqa: E402
 import numpy as np                                       # noqa: E402
 
+from common import add_json_arg, maybe_write_json        # noqa: E402
 from repro.config import get_arch                        # noqa: E402
 from repro.config.base import FLConfig                   # noqa: E402
 from repro.core.engine import make_engine                # noqa: E402
@@ -92,7 +92,7 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (< 30 s): parity gate only")
-    ap.add_argument("--out", default=None)
+    add_json_arg(ap, "shard")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -136,10 +136,7 @@ def main(argv=None):
     print(f"[bench_shard] max |sharded - single-device| = {max_err:.2e} "
           f"({'OK' if parity_ok else 'MISMATCH'})")
 
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
-        print(f"[bench_shard] results -> {args.out}")
+    maybe_write_json(args, "shard", results)
     if args.smoke:
         ok = parity_ok and max(mesh_sizes) > 1
         print(f"[bench_shard] smoke {'PASS' if ok else 'FAIL'}")

@@ -1,0 +1,180 @@
+"""A/B benchmark: device-resident ClientStateStore vs dict-of-pytrees.
+
+    PYTHONPATH=src python benchmarks/bench_store.py [--clients 32]
+        [--tau 8] [--rounds 16] [--window 16] [--reps 5]
+        [--smoke] [--json [PATH]]
+
+Both arms run the SAME event-driven windowed async runtime
+(``AsyncRunner``) over the same ``WirelessNetwork`` realization and
+update budget; the only difference is where client snapshots live:
+
+* dict  — ``use_store=False``: a ``Dict[int, pytree]`` of N scattered
+  model copies, re-stacked leaf by leaf (``tree_map(jnp.stack)``) on
+  every drained window (the PR 2 behaviour);
+* store — ``use_store=True``: one flat (N, P) device buffer, gathered
+  per window and re-scattered by the fused donating merge+scatter
+  program (``engine.train_window``).
+
+Histories are bit-identical by construction (asserted every run), so
+the harness measures pure server-step overhead: merged client updates
+per second over the whole run, plus a snapshot-assembly micro-bench at
+cohort 16 ("peak stacking": ``tree_map(jnp.stack)`` over 16 snapshot
+pytrees vs one ``store.gather``).
+
+The trainer is a synthetic many-leaf model (24 leaves, ~6k params)
+whose cohort step is a single jitted elementwise update: local
+training is deliberately cheap so the number isolates the snapshot
+gather/stack + merge + re-snapshot path the store replaces.  Real
+models shift both arms by the same training time, so the store's win
+is a lower bound on nothing and an upper bound on everything — read it
+as "server-step overhead shrinks by this factor", not end-to-end
+wall-clock.
+
+``--smoke`` is the CI-sized run (< 30 s on 2 CPU cores): exits
+non-zero unless windows actually batch (mean cohort > 1), histories
+match bit-for-bit, and the store arm beats dict events/sec.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from common import add_json_arg, maybe_write_json, time_fn
+from repro.config.base import FLConfig
+from repro.core.state import ClientStateStore
+from repro.fl.network import WirelessNetwork
+from repro.fl.testing import SyntheticCohortTrainer
+from repro.runtime.async_loop import AsyncRunner
+
+
+def ManyLeafTrainer():
+    """24-leaf synthetic model (shared trainer-contract implementation
+    in ``repro.fl.testing``): enough uniform leaves that leaf-by-leaf
+    snapshot stacking dominates the dict arm's server step."""
+    return SyntheticCohortTrainer.many_leaf(n_leaves=24, leaf=256)
+
+
+def run_arm(trainer, fl, seed, *, use_store: bool, window: int,
+            reps: int):
+    """Best-of-``reps`` events/sec over identical realizations (the
+    shared trainer keeps both arms' jit caches warm after the warmup
+    pass, so reps measure steady-state server overhead)."""
+    best = None
+    hist = None
+    for _ in range(reps):
+        net = WirelessNetwork(fl.n_clients, fl.tier_delay_means,
+                              fl.delay_std, fl.mu, fl.failure_delay, seed)
+        runner = AsyncRunner(trainer, net, fl, window=window,
+                             eval_every=fl.rounds * fl.tau + 1,
+                             use_store=use_store)
+        t0 = time.perf_counter()
+        hist = runner.run()
+        wall = time.perf_counter() - t0
+        events = sum(runner.cohort_sizes)
+        eps = events / wall
+        if best is None or eps > best["events_per_sec"]:
+            best = {"wall_s": wall, "events": events,
+                    "events_per_sec": eps,
+                    "mean_cohort": hist.meta["mean_cohort"],
+                    "n_drains": hist.meta["n_drains"]}
+    return best, hist
+
+
+def stacking_microbench(cohort: int):
+    """Median microseconds to assemble a cohort's start snapshots:
+    leaf-by-leaf stacking of ``cohort`` pytrees vs one store gather."""
+    trainer = ManyLeafTrainer()
+    params = trainer.init_params(0)
+    snapshots = [trainer.init_params(i) for i in range(cohort)]
+
+    def stack_arm():
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                      *snapshots)
+
+    store = ClientStateStore(params, cohort)
+    for i, s in enumerate(snapshots):
+        store.scatter_params([i], s)
+    ids = list(range(cohort))
+
+    def gather_arm():
+        return store.gather(ids)
+
+    return {"stack_us": time_fn(stack_arm, iters=30),
+            "store_gather_us": time_fn(gather_arm, iters=30)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--window", type=int, default=16,
+                    help="count window: merge cohorts of exactly K "
+                         "completions (the acceptance gate's cohort 16)")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (< 30 s); exits non-zero unless "
+                         "the store arm beats dict-of-pytrees events/sec "
+                         "at cohort 16 with bit-identical histories")
+    add_json_arg(ap, "store")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.clients, args.rounds, args.tau = 32, 16, 8
+        args.window = 16
+
+    fl = FLConfig(n_clients=args.clients, n_tiers=4, tau=args.tau,
+                  rounds=args.rounds, mu=0.0, primary_frac=0.7,
+                  seed=args.seed, lr=0.003)
+
+    # warm both arms' jit caches with a throwaway run each (cohort
+    # widths are a pure function of (network, fl, window))
+    trainer = ManyLeafTrainer()
+    for use_store in (False, True):
+        run_arm(trainer, fl, args.seed, use_store=use_store,
+                window=args.window, reps=1)
+
+    results = {}
+    hists = {}
+    for label, use_store in (("dict", False), ("store", True)):
+        results[label], hists[label] = run_arm(
+            trainer, fl, args.seed, use_store=use_store,
+            window=args.window, reps=args.reps)
+        r = results[label]
+        print(f"[{label:5s}] events={r['events']:4d}  "
+              f"wall={r['wall_s']:6.3f}s  "
+              f"{r['events_per_sec']:8.1f} ev/s  "
+              f"mean_cohort={r['mean_cohort']:5.2f}  "
+              f"drains={r['n_drains']:3d}")
+
+    hs, hd = hists["store"], hists["dict"]
+    identical = (hs.rounds == hd.rounds and hs.times == hd.times
+                 and hs.accuracy == hd.accuracy)
+    speedup = (results["store"]["events_per_sec"]
+               / results["dict"]["events_per_sec"])
+    micro = stacking_microbench(16)
+    results["speedup"] = speedup
+    results["histories_identical"] = identical
+    results["stacking_cohort16"] = micro
+    print(f"[bench_store] store/dict events/sec: {speedup:.2f}x  "
+          f"histories {'IDENTICAL' if identical else 'MISMATCH'}")
+    print(f"[bench_store] cohort-16 snapshot assembly: "
+          f"tree_map(stack)={micro['stack_us']:8.1f}us  "
+          f"store.gather={micro['store_gather_us']:8.1f}us")
+
+    maybe_write_json(args, "store", results)
+    if args.smoke:
+        ok = (identical and speedup > 1.0
+              and results["store"]["mean_cohort"] > 1.0)
+        print(f"[bench_store] smoke {'PASS' if ok else 'FAIL'}")
+        raise SystemExit(0 if ok else 1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

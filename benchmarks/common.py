@@ -1,9 +1,14 @@
-"""Shared benchmark helpers: FL experiment runner + timing utilities."""
+"""Shared benchmark helpers: FL experiment runner, timing utilities,
+and the machine-readable ``BENCH_<name>.json`` trajectory writer every
+A/B harness feeds (so future PRs can diff throughput numbers instead
+of re-reading log lines)."""
 
 from __future__ import annotations
 
 import json
 import os
+import platform
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -15,6 +20,55 @@ from repro.fl.client import build_fl_clients
 from repro.fl.network import WirelessNetwork
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+# ---------------------------------------------------------------------------
+# machine-readable benchmark trajectories
+# ---------------------------------------------------------------------------
+
+def add_json_arg(ap, name: str):
+    """Register ``--json [PATH]`` on an argparse parser: write the
+    harness results as ``BENCH_<name>.json`` next to the benchmarks
+    (or to an explicit PATH)."""
+    ap.add_argument(
+        "--json", nargs="?", const="", default=None, metavar="PATH",
+        help=f"write machine-readable results (default "
+             f"benchmarks/BENCH_{name}.json; pass PATH to override)")
+
+
+def write_bench_json(name: str, results: Dict, path: Optional[str] = None
+                     ) -> str:
+    """Dump one benchmark run as ``{"bench", "context", "results"}``.
+
+    ``results`` is the harness's own dict (arms, speedups, gates);
+    ``context`` records enough environment to compare trajectories
+    across PRs.  Returns the path written."""
+    out = path or os.path.join(os.path.dirname(__file__),
+                               f"BENCH_{name}.json")
+    import jax
+    payload = {
+        "bench": name,
+        "context": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "cpu_count": os.cpu_count(),
+            "argv": sys.argv[1:],
+        },
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    print(f"[{name}] json -> {out}")
+    return out
+
+
+def maybe_write_json(args, name: str, results: Dict):
+    """Honor ``add_json_arg``'s flag if the caller passed it."""
+    if getattr(args, "json", None) is not None:
+        write_bench_json(name, results, path=args.json or None)
 
 
 def run_fl_experiment(*, arch: str, method: str, mu: float,

@@ -1,10 +1,12 @@
 from repro.core.tiering import tiering, update_avg_time, evaluate_client
 from repro.core.selection import cstt, tier_timeouts, move_tier, select_from_tier
-from repro.core.aggregation import (weighted_average,
+from repro.core.aggregation import (aggregate_or_keep,
+                                    weighted_average,
                                     weighted_average_stacked,
                                     staleness_merge,
                                     staleness_weighted_merge)
 from repro.core.engine import BatchedClientEngine, make_engine
+from repro.core.state import ClientStateStore
 from repro.core.scheduler import run_feddct
 from repro.core.baselines import (run_fedavg, run_tifl, run_fedasync,
                                   run_fedasync_sequential, run_fedbuff,
@@ -14,9 +16,9 @@ from repro.core.baselines import (run_fedavg, run_tifl, run_fedasync,
 __all__ = [
     "tiering", "update_avg_time", "evaluate_client",
     "cstt", "tier_timeouts", "move_tier", "select_from_tier",
-    "weighted_average", "weighted_average_stacked", "staleness_merge",
-    "staleness_weighted_merge",
-    "BatchedClientEngine", "make_engine",
+    "aggregate_or_keep", "weighted_average", "weighted_average_stacked",
+    "staleness_merge", "staleness_weighted_merge",
+    "BatchedClientEngine", "ClientStateStore", "make_engine",
     "run_feddct", "run_fedavg", "run_tifl", "run_fedasync",
     "run_fedasync_sequential", "run_fedbuff", "run_feddct_async",
     "run_fedprox", "run_method",

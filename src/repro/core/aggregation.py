@@ -15,7 +15,14 @@ Three layers:
 * ``staleness_weighted_merge`` — the async runtime's windowed merge:
   the exact batched equivalent of sequentially applying
   ``staleness_merge`` row by row, computed as ONE stacked reduction
-  with the global model riding along as row 0.
+  with the global model as an IMPLICIT row 0 (its telescoped
+  coefficient multiplies the global leaves directly — no
+  ``jnp.concatenate`` of a (K+1, ...) copy, no fresh ``np.ones``
+  weight vector per window).
+* ``aggregate_or_keep`` — ``weighted_average_stacked`` with the
+  all-masked guard moved on device: a ``lax.cond`` returns the global
+  params unchanged when every effective weight is zero, so the round
+  step never syncs a weight sum back to the host.
 * ``weighted_average`` — list-of-pytrees convenience wrapper kept for
   the looped reference implementations and external callers; it stacks
   then delegates.
@@ -66,6 +73,43 @@ def weighted_average_stacked(stacked, weights, *, alphas=None,
     return _agg_jnp(stacked, w, a)
 
 
+@jax.jit
+def _agg_or_keep_jnp(params, stacked, w, a):
+    eff = w * a
+    total = jnp.sum(jnp.where(eff > 0.0, eff, 0.0))
+
+    def agg():
+        # cast to the params leaves' dtypes so both cond branches carry
+        # identical avals even when a trainer returns float-promoted
+        # updates (astype is a no-op for matching dtypes)
+        return jax.tree_util.tree_map(
+            lambda p, m: m.astype(p.dtype), params,
+            _agg_jnp(stacked, w, a))
+
+    return jax.lax.cond(total > 0.0, agg, lambda: params)
+
+
+def aggregate_or_keep(params, stacked, weights, *, alphas=None,
+                      use_kernel: bool = False,
+                      interpret: Optional[bool] = None):
+    """``weighted_average_stacked`` that falls back to ``params`` when
+    every effective weight is zero (the all-straggler round), decided
+    ON DEVICE via ``lax.cond`` — no per-round host sync of the weight
+    sum.  Leaf shapes/dtypes of ``params`` must match the per-row
+    shapes of ``stacked`` (the engine round contract)."""
+    w = jnp.asarray(weights, jnp.float32)
+    a = (jnp.ones_like(w) if alphas is None
+         else jnp.asarray(alphas, jnp.float32))
+    if use_kernel:
+        agg = weighted_average_stacked(stacked, w, alphas=a,
+                                       use_kernel=True, interpret=interpret)
+        any_live = jnp.sum(jnp.where(w * a > 0.0, w * a, 0.0)) > 0.0
+        return jax.tree_util.tree_map(
+            lambda p, m: jnp.where(any_live, m.astype(p.dtype), p),
+            params, agg)
+    return _agg_or_keep_jnp(params, stacked, w, a)
+
+
 def weighted_average(param_list: Sequence, sizes: Sequence[float],
                      use_kernel: bool = False,
                      interpret: Optional[bool] = None):
@@ -109,6 +153,29 @@ def staleness_merge_coefficients(alphas) -> np.ndarray:
     return np.concatenate([[g], coef]).astype(np.float32)
 
 
+@jax.jit
+def _merge_folded_jnp(global_params, stacked, coef):
+    """Folded window merge: coef (K+1,) row coefficients with the
+    global model as the IMPLICIT row 0.  The exact per-leaf ops of
+    ``_agg_jnp`` with the row-0 term pulled out of the stacked
+    reduction — zero-coefficient rows are masked to exactly zero
+    BEFORE the sum, so nonfinite garbage in masked rows (and the
+    zero-padded rows of the store's fused round step) contributes
+    nothing."""
+    c = jnp.where(coef > 0.0, coef, 0.0)
+    c = c / jnp.maximum(c.sum(), 1e-30)
+    cr = c[1:]
+
+    def merge(g, leaf):
+        cb = cr.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        u = jnp.where(cb > 0.0, leaf.astype(jnp.float32), 0.0)
+        g_term = jnp.where(c[0] > 0.0,
+                           c[0] * g.astype(jnp.float32), 0.0)
+        return (g_term + jnp.sum(u * cb, axis=0)).astype(g.dtype)
+
+    return jax.tree_util.tree_map(merge, global_params, stacked)
+
+
 def staleness_weighted_merge(global_params, stacked, alphas, *,
                              use_kernel: bool = False,
                              interpret: Optional[bool] = None):
@@ -119,18 +186,25 @@ def staleness_weighted_merge(global_params, stacked, alphas, *,
     a_i = alpha * (s_i + 1)^-a in merge order.  The result is the same
     convex combination a sequential ``staleness_merge`` fold would
     produce (up to float reassociation), computed as ONE stacked
-    reduction (optionally the
-    fused Pallas fedagg kernel) with the global model as row 0.
-    Zero-alpha rows (masked stragglers) contribute exactly nothing.
+    reduction with the global model as an IMPLICIT row 0: its
+    telescoped coefficient multiplies the global leaves directly, so
+    no (K+1, ...) copy is materialized and no per-window ``np.ones``
+    weight vector is allocated.  Zero-alpha rows (masked stragglers)
+    contribute exactly nothing.
+
+    ``use_kernel=True`` routes through the Pallas fedagg kernel, which
+    reduces materialized rows — that path still stacks the global
+    model in as row 0 (the kernel is the on-TPU dispatch; CPU tests
+    run it in interpret mode only).
     """
     coef = staleness_merge_coefficients(alphas)
-    full = jax.tree_util.tree_map(
-        lambda g, s: jnp.concatenate(
-            [g[None].astype(s.dtype), s], axis=0),
-        global_params, stacked)
-    # uniform unit weights; the merge coefficients ride in the alpha
-    # row-vector and already sum to 1, so normalization is a no-op.
-    ones = np.ones(coef.shape[0], np.float32)
-    return weighted_average_stacked(full, ones, alphas=coef,
-                                    use_kernel=use_kernel,
-                                    interpret=interpret)
+    if use_kernel:
+        from repro.kernels import fedagg_pytree
+        full = jax.tree_util.tree_map(
+            lambda g, s: jnp.concatenate(
+                [g[None].astype(s.dtype), s], axis=0),
+            global_params, stacked)
+        ones = jnp.ones(coef.shape[0], jnp.float32)
+        return fedagg_pytree(full, ones, alphas=jnp.asarray(coef),
+                             interpret=interpret)
+    return _merge_folded_jnp(global_params, stacked, jnp.asarray(coef))

@@ -19,7 +19,10 @@ All methods share the trainer + WirelessNetwork realization with FedDCT
 and run their per-round cohort through the batched execution engine
 (core/engine.py) — one vmapped device program per round instead of a
 per-client Python loop (pass ``engine="looped"`` for the reference
-path).
+path).  Sync rounds keep the all-masked guard on device
+(``engine.train_round``'s ``lax.cond``); async methods keep client
+snapshots in the device-resident ``ClientStateStore`` (one flat (N, P)
+buffer, ``use_store=False`` for the dict-of-pytrees reference).
 """
 
 from __future__ import annotations
@@ -198,27 +201,32 @@ def run_fedasync_sequential(trainer, network, fl: FLConfig, *,
 def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
                  use_kernel_agg: bool = False, verbose: bool = False,
                  eval_every: int = 5, window: int = 0,
-                 window_secs: float = 0.0, mesh=None) -> RunHistory:
+                 window_secs: float = 0.0, mesh=None,
+                 use_store=None) -> RunHistory:
     """FedAsync on the event-driven runtime.
 
     ``window=0`` (default) reproduces the sequential one-merge-per-event
     loop history-identically; ``window=K`` / ``window_secs=T`` batch
     concurrently-finishing completions into one vmapped cohort merged
     with per-client staleness weights (FedBuff / time-triggered
-    semantics).
+    semantics).  Windowed runs keep snapshots in the device-resident
+    ``ClientStateStore`` by default; ``use_store`` is tri-state (None =
+    auto: store exactly when windows batch, False = dict-of-pytrees
+    reference path — histories bit-identical either way).
     """
     from repro.runtime.async_loop import AsyncRunner
     return AsyncRunner(trainer, network, fl, method="fedasync",
                        engine=engine, use_kernel_agg=use_kernel_agg,
                        window=window, window_secs=window_secs,
                        eval_every=eval_every, verbose=verbose,
-                       mesh=mesh).run()
+                       mesh=mesh, use_store=use_store).run()
 
 
 def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                 use_kernel_agg: bool = False, verbose: bool = False,
                 eval_every: int = 5, window: int = 0,
-                window_secs: float = 0.0, mesh=None) -> RunHistory:
+                window_secs: float = 0.0, mesh=None,
+                use_store=None) -> RunHistory:
     """FedBuff [Nguyen'22]: async with a K-completion aggregation goal
     (default K = fl.tau, the sync methods' per-round cohort size)."""
     from repro.runtime.async_loop import AsyncRunner
@@ -226,7 +234,7 @@ def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                        engine=engine, use_kernel_agg=use_kernel_agg,
                        window=window or fl.tau, window_secs=window_secs,
                        eval_every=eval_every, verbose=verbose,
-                       mesh=mesh).run()
+                       mesh=mesh, use_store=use_store).run()
 
 
 def run_feddct_async(trainer, network, fl: FLConfig, **kw) -> RunHistory:

@@ -28,7 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (staleness_weighted_merge,
+from repro.core.aggregation import (aggregate_or_keep,
+                                    staleness_merge_coefficients,
+                                    staleness_weighted_merge,
                                     weighted_average_stacked)
 
 
@@ -156,6 +158,14 @@ class BatchedClientEngine:
             params, stacked, alphas, use_kernel=self.use_kernel_agg,
             interpret=self.interpret)
 
+    def aggregate_or_keep(self, params, stacked, weights):
+        """``aggregate`` with the all-masked guard on device: a
+        ``lax.cond`` keeps ``params`` when every effective weight is
+        zero, so the round never syncs a weight sum to the host."""
+        return aggregate_or_keep(params, stacked, weights,
+                                 use_kernel=self.use_kernel_agg,
+                                 interpret=self.interpret)
+
     # -- fused round ----------------------------------------------------
     def train_round(self, params, client_ids: Sequence[int], rnd_seed: int,
                     weights: Optional[Sequence[float]] = None):
@@ -164,15 +174,59 @@ class BatchedClientEngine:
         ``weights`` defaults to per-client sample counts; pass an
         explicit vector (zeros for masked clients) to drop updates
         without re-packing.  An empty cohort (all-straggler round)
-        returns ``params`` unchanged — the FedDCT Alg. 2 convention.
+        returns ``params`` unchanged — the FedDCT Alg. 2 convention —
+        decided host-side BEFORE training; the all-masked (every
+        survivor zero-weighted) guard lives on device.
         """
         stacked, sizes = self.train_clients(params, client_ids, rnd_seed)
         if stacked is None:
             return params
         w = sizes if weights is None else np.asarray(weights, np.float32)
-        if float(np.sum(w)) <= 0.0:
-            return params                     # every survivor was masked
-        return self.aggregate(stacked, w)
+        return self.aggregate_or_keep(params, stacked, w)
+
+    # -- fused store-backed async window --------------------------------
+    def train_window(self, store, params, client_ids: Sequence[int],
+                     rnd_seeds: Sequence[int], alphas: Sequence[float]):
+        """One drained async window against a ``ClientStateStore``:
+        gather cohort snapshots -> cohort train -> folded staleness
+        merge (zero-coefficient straggler/pad masking) -> scatter the
+        new global row back into the merged clients' slots.
+
+        The snapshot gather, the merge, the new-global flatten and the
+        scatter each run as one device program per padded cohort-size
+        bucket (the merge+scatter program donates the store buffer);
+        padded rows ride through the merge with coefficient 0 instead
+        of being sliced off, so there is no post-hoc host repack.
+        Returns ``(new_params, new_global_flat)``.
+        """
+        ids = [int(c) for c in client_ids]
+        seeds = [int(s) for s in rnd_seeds]
+        n = len(ids)
+        if n == 0:
+            return params, store.flatten(params)
+        coef = staleness_merge_coefficients(alphas)
+        if self._can_cohort:
+            run_ids, run_seeds = self._pad_pow2(ids, seeds)
+            starts = store.gather(run_ids)
+            try:
+                stacked, _ = self._local_train_cohort(starts, run_ids,
+                                                      run_seeds)
+                pad = np.zeros(len(run_ids) - n, np.float32)
+                return store.merge_scatter(
+                    run_ids, stacked, np.concatenate([coef, pad]), params)
+            except NotImplementedError:
+                self._can_cohort = False
+        # looped fallback (trainers without local_train_cohort): rows
+        # still merge + scatter through the store's fused program.
+        outs = [self.trainer.local_train(store.gather_one(c), c,
+                                         rnd_seed=s)
+                for c, s in zip(ids, seeds)]
+        run_ids, trees = self._pad_pow2(ids, [p for p, _ in outs])
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *trees)
+        pad = np.zeros(len(run_ids) - n, np.float32)
+        return store.merge_scatter(run_ids, stacked,
+                                   np.concatenate([coef, pad]), params)
 
 
 def make_engine(trainer, *, use_kernel_agg: bool = False,

@@ -14,8 +14,10 @@ Round flow:
      engine (core/engine.py) — virtual stragglers are known before
      training, so the cohort is trimmed first and the whole round is a
      single device program.
-  4. Aggregate survivors weighted by sample count, on device; clock
-     advances by Eq. 5/6: D = max over used tiers of
+  4. Aggregate survivors weighted by sample count, on device — the
+     all-masked guard is a device-side ``lax.cond`` inside
+     ``engine.train_round`` (no per-round host sync of the weight
+     sum); clock advances by Eq. 5/6: D = max over used tiers of
      min(max(st in tier), D_max^t, Ω).
   5. Clients whose evaluation lane finished (virtual time passed) rejoin
      with their refreshed average time.

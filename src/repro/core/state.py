@@ -1,0 +1,217 @@
+"""Device-resident flat client-state store — where client models LIVE.
+
+The async runtime (PR 2) kept per-client model snapshots as a Python
+``Dict[int, pytree]``: N full scattered copies of the model, re-stacked
+leaf by leaf (``tree_map(jnp.stack)``) on every drained window before
+the cohort could train.  The flatten-once ``(N, P)`` representation the
+Pallas fedagg kernel already uses for aggregation is the natural home
+for that state instead: ``ClientStateStore`` holds every client's
+snapshot as one row of a single device-resident ``(N, P)`` f32 buffer,
+with the unflatten spec (per-leaf offset/size/shape/dtype views) cached
+once at construction.
+
+* ``gather(ids)`` returns the stacked start-params pytree for a cohort
+  (one device program: row gather + per-leaf slice/reshape/cast) — no
+  per-leaf host stacking, no dict lookups.
+* ``scatter(ids, flat_global)`` writes one global row into the merged
+  clients' slots via ``buf.at[ids].set(...)`` under a jit that DONATES
+  the buffer (donation is applied on accelerator backends; XLA CPU
+  does not implement donation, so it is skipped there to avoid
+  warnings), so the store updates in place instead of copying N*P
+  floats per window.
+* ``merge_scatter(ids, stacked_updates, coef, global_flat)`` is the
+  fused tail of the async round step: staleness merge (global model as
+  the implicit row 0, zero-coefficient rows masked to exact no-ops —
+  the straggler-mask convention, which also makes padded rows free) +
+  flatten of the new global row + scatter, ONE jitted buffer-donating
+  program per padded cohort-size bucket.
+
+Donation contract: the store owns its buffer.  Callers must NOT hold
+references into ``store.buffer`` across ``scatter``/``merge_scatter``
+calls — on donating backends the old buffer is invalidated in place.
+``gather``/``gather_one`` return fresh arrays and are always safe.
+
+Sharding: pass a 1-D client mesh to shard the row axis across devices
+(rows padded to a mesh multiple via ``ClientShardingPlan`` — the extra
+rows are never addressed).  Gather/merge/scatter then run as GSPMD
+programs over the row-sharded buffer, composing with the sharded
+engine's cohort padding.
+
+Dtype note: rows are f32; f32/bf16/f16 leaves round-trip exactly
+(every bf16/f16 value is exactly representable in f32).  Integer /
+f64 leaves are rejected at construction.
+"""
+
+from __future__ import annotations
+
+import functools
+from types import SimpleNamespace
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import _merge_folded_jnp
+from repro.kernels.ops import flatten_tree, tree_spec, unflatten_tree
+
+_OK_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+@functools.lru_cache(maxsize=None)
+def _programs(treedef, spec, donate: bool):
+    """Jitted store programs, cached per (tree structure, donation
+    mode) so every store over the same model family shares compiled
+    code — a fresh store per run costs zero recompiles."""
+
+    def flatten_impl(tree):
+        return flatten_tree(tree)[0]
+
+    def unflatten_impl(flat):
+        return unflatten_tree(flat, treedef, spec)
+
+    def unflatten_stacked_impl(rows):
+        k = rows.shape[0]
+        outs = [rows[:, off:off + size].reshape((k,) + shape)
+                .astype(dtype) for off, size, shape, dtype in spec]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    def gather_impl(buf, ids):
+        return unflatten_stacked_impl(buf[ids])
+
+    def gather_one_impl(buf, i):
+        return unflatten_impl(buf[i])
+
+    def scatter_impl(buf, ids, row):
+        return buf.at[ids].set(row)
+
+    def scatter_params_impl(buf, ids, params):
+        row = flatten_impl(params)
+        return buf.at[ids].set(row), row
+
+    def merge_scatter_impl(buf, ids, stacked, coef, params):
+        # the exact folded-merge program of the dict-of-pytrees path
+        # (staleness_weighted_merge), fused with the flatten of the
+        # new global row and the snapshot scatter — padded rows carry
+        # coef 0 and are masked to exact no-ops.
+        new_params = _merge_folded_jnp(params, stacked, coef)
+        new_g = flatten_impl(new_params)
+        return buf.at[ids].set(new_g), new_g, new_params
+
+    def init_impl(params, rows):
+        return jnp.tile(flatten_impl(params)[None], (rows, 1))
+
+    dk = dict(donate_argnums=(0,)) if donate else {}
+    return SimpleNamespace(
+        flatten=jax.jit(flatten_impl),
+        unflatten=jax.jit(unflatten_impl),
+        gather=jax.jit(gather_impl),
+        gather_one=jax.jit(gather_one_impl),
+        scatter=jax.jit(scatter_impl, **dk),
+        scatter_params=jax.jit(scatter_params_impl, **dk),
+        merge_scatter=jax.jit(merge_scatter_impl, **dk),
+        init=jax.jit(init_impl, static_argnums=(1,)),
+    )
+
+
+class ClientStateStore:
+    """All N client model snapshots as one device-resident (N, P) f32
+    buffer.  One instance per run; it owns the buffer (see the
+    donation contract in the module docstring)."""
+
+    def __init__(self, template_params, n_clients: int, *, mesh=None):
+        if n_clients < 1:
+            raise ValueError(f"need at least one client, got {n_clients}")
+        treedef, spec, self.p = tree_spec(template_params)
+        self.treedef, self.spec = treedef, spec
+        for _, _, shape, dtype in spec:
+            if jnp.dtype(dtype) not in [jnp.dtype(d) for d in _OK_DTYPES]:
+                raise TypeError(
+                    f"ClientStateStore rows are f32: leaf dtype {dtype} "
+                    "does not round-trip exactly (float leaves only)")
+        self.n = int(n_clients)
+        self.mesh = mesh if (mesh is not None and int(mesh.size) > 1) \
+            else None
+        if self.mesh is not None:
+            from repro.distributed.plan import ClientShardingPlan
+            self.rows = ClientShardingPlan.for_cohort(
+                self.n, self.mesh).padded_n
+        else:
+            self.rows = self.n
+        # XLA CPU does not implement buffer donation — donating there
+        # only emits warnings.  Donate on real accelerator backends.
+        self._donate = jax.default_backend() != "cpu"
+        self._fns = _programs(treedef, tuple(tuple(s) for s in spec),
+                              self._donate)
+        buf = self._fns.init(template_params, self.rows)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            buf = jax.device_put(
+                buf, NamedSharding(self.mesh, P(self.mesh.axis_names[0])))
+        self.buf = buf
+
+    @staticmethod
+    def _ids(ids) -> jnp.ndarray:
+        return jnp.asarray(np.asarray(ids, np.int32))
+
+    # -- flat <-> pytree views ------------------------------------------
+    @property
+    def buffer(self):
+        """The (rows, P) f32 buffer.  Read-only by convention — do not
+        hold a reference across scatter/merge_scatter (donation)."""
+        return self.buf
+
+    def flatten(self, params):
+        """Model pytree -> (P,) f32 row (one jitted concat)."""
+        return self._fns.flatten(params)
+
+    def unflatten(self, flat):
+        """(P,) row -> model pytree with per-leaf shapes/dtypes."""
+        return self._fns.unflatten(flat)
+
+    # -- gather / scatter -----------------------------------------------
+    def gather(self, ids: Sequence[int]):
+        """-> stacked start-params pytree, leaves (len(ids), ...).
+
+        One device program per ids-length bucket (callers pad cohorts
+        — the engine's pow2/mesh convention — to bound retraces).
+        Duplicate ids are fine (padded slots repeat the last client).
+        """
+        return self._fns.gather(self.buf, self._ids(ids))
+
+    def gather_one(self, client_id: int):
+        """-> one client's snapshot as a model pytree."""
+        return self._fns.gather_one(self.buf, int(client_id))
+
+    def scatter(self, ids: Sequence[int], flat_global):
+        """Write one (P,) global row into every ``ids`` slot in place
+        (donated).  Duplicate ids write the same row — harmless."""
+        self.buf = self._fns.scatter(self.buf, self._ids(ids),
+                                     flat_global)
+
+    def scatter_params(self, ids: Sequence[int], params):
+        """Flatten ``params`` and scatter it into ``ids`` as ONE
+        program; returns the (P,) row for callers tracking the current
+        global row."""
+        self.buf, row = self._fns.scatter_params(self.buf,
+                                                  self._ids(ids), params)
+        return row
+
+    # -- fused merge + scatter (the async round-step tail) --------------
+    def merge_scatter(self, ids: Sequence[int], stacked_updates, coef,
+                      params):
+        """Fold one drained window into the global model and re-snapshot
+        the merged clients, as ONE donated program.
+
+        ``stacked_updates``: trained cohort pytree, leaves
+        (len(ids), ...).  ``coef``: (len(ids)+1,) telescoped merge
+        coefficients (``staleness_merge_coefficients`` order: global
+        row 0 first) — zero entries (masked stragglers / padded rows)
+        contribute exactly nothing.  ``params``: the current global
+        model pytree.  Returns ``(new_params, new_global_flat)``.
+        """
+        coef = jnp.asarray(np.asarray(coef, np.float32))
+        self.buf, new_g, new_params = self._fns.merge_scatter(
+            self.buf, self._ids(ids), stacked_updates, coef, params)
+        return new_params, new_g

@@ -10,17 +10,19 @@ all-reduce plus one scalar.
 
 Numerics: identical masking semantics to the reference (rows with
 ``eff_c = w_c * alpha_c <= 0`` contribute exactly nothing; an
-all-masked cohort yields zeros), equal up to float reassociation —
-partial sums reduce per-shard before the psum, so results match the
-single-device reduction within dtype tolerance, not bitwise.
-``sharded_staleness_merge`` rides the same reduction with the PR 2
-staleness coefficients (global model as row 0), exactly like
-``staleness_weighted_merge`` does on one device.
+all-masked cohort yields zeros — or ``fallback`` when given), equal up
+to float reassociation — partial sums reduce per-shard before the
+psum, so results match the single-device reduction within dtype
+tolerance, not bitwise.  ``sharded_staleness_merge`` rides the same
+reduction with the PR 2 staleness coefficients, the global model as an
+IMPLICIT row 0 (its telescoped coefficient multiplies the flattened
+global row directly — no (K+1, ...) concatenated copy, matching the
+folded single-device ``staleness_weighted_merge``).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +37,7 @@ from repro.kernels.ops import flatten_updates, unflatten_result
 # mesh -> jitted shard_map reduction (meshes hash by device assignment,
 # so one compiled program per distinct client mesh)
 _AGG_CACHE: Dict[object, object] = {}
+_MERGE_CACHE: Dict[object, object] = {}
 
 
 def _agg_fn(mesh):
@@ -53,17 +56,18 @@ def _agg_fn(mesh):
             masked = jnp.where((eff > 0.0)[:, None], u, 0.0)
             num = jax.lax.psum(eff @ masked, axis)      # (P,)
             den = jax.lax.psum(eff.sum(), axis)         # scalar
-            return num / jnp.maximum(den, 1e-30)
+            return num / jnp.maximum(den, 1e-30), den
 
         fn = jax.jit(shard_map(
             partial_reduce, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis)), out_specs=P(),
+            in_specs=(P(axis), P(axis), P(axis)), out_specs=(P(), P()),
             check_rep=False))
         _AGG_CACHE[mesh] = fn
     return fn
 
 
-def sharded_aggregate(mesh, stacked, weights, *, alphas=None):
+def sharded_aggregate(mesh, stacked, weights, *, alphas=None,
+                      fallback=None):
     """Client-sharded ``weighted_average_stacked``.
 
     ``stacked`` is a pytree whose leaves carry a leading client axis
@@ -74,6 +78,10 @@ def sharded_aggregate(mesh, stacked, weights, *, alphas=None):
     weight (exact no-op rows), reduced per shard, and combined by one
     psum.  Returns the aggregated pytree with per-leaf shapes/dtypes
     restored.
+
+    ``fallback``: an optional per-row-shaped pytree (the global params)
+    returned — via a device-side select, no host sync — when every
+    effective weight is zero (the all-masked round).
     """
     buf, treedef, spec = flatten_updates(stacked)
     n = buf.shape[0]
@@ -84,20 +92,68 @@ def sharded_aggregate(mesh, stacked, weights, *, alphas=None):
         raise ValueError(
             f"weights/alphas length {w.shape[0]}/{a.shape[0]} != rows {n}")
     plan = ClientShardingPlan.for_cohort(n, mesh)
-    flat = _agg_fn(mesh)(plan.pad_stacked(buf, mode="zero"),
-                         plan.pad_weights(w), plan.pad_weights(a))
-    return unflatten_result(flat, treedef, spec)
+    flat, den = _agg_fn(mesh)(plan.pad_stacked(buf, mode="zero"),
+                              plan.pad_weights(w), plan.pad_weights(a))
+    out = unflatten_result(flat, treedef, spec)
+    if fallback is None:
+        return out
+    return jax.tree_util.tree_map(
+        lambda m, p: jnp.where(den > 0.0, m.astype(p.dtype), p),
+        out, fallback)
+
+
+def _merge_fn(mesh):
+    fn = _MERGE_CACHE.get(mesh)
+    if fn is None:
+        axis = mesh.axis_names[0]
+
+        def partial_merge(u, c):
+            # u (rows/D, P) f32, c (rows/D,) this shard's (already
+            # normalized) merge coefficients; zero rows are padding or
+            # masked stragglers — exact no-ops.
+            masked = jnp.where((c > 0.0)[:, None], u, 0.0)
+            return jax.lax.psum(c @ masked, axis)       # (P,)
+
+        fn = jax.jit(shard_map(
+            partial_merge, mesh=mesh,
+            in_specs=(P(axis), P(axis)), out_specs=P(),
+            check_rep=False))
+        _MERGE_CACHE[mesh] = fn
+    return fn
+
+
+@jax.jit
+def _fold_global(flat_sum, global_params, c0):
+    # flatten of the global model rides inside the jit: one dispatch
+    # per window, not one per leaf
+    g_flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(global_params)])
+    g_term = jnp.where(c0 > 0.0, c0 * g_flat, 0.0)
+    return g_term + flat_sum
 
 
 def sharded_staleness_merge(mesh, global_params, stacked, alphas):
     """Client-sharded ``staleness_weighted_merge``: the async window
-    merge as one sharded reduction, global model riding as row 0 with
-    the telescoped merge coefficients (which sum to 1, so the
-    normalization inside ``sharded_aggregate`` is a no-op).  Zero-alpha
-    rows (masked stragglers) contribute exactly nothing."""
+    merge as one sharded reduction over the client rows, the global
+    model riding as an IMPLICIT row 0 — its telescoped coefficient
+    multiplies the flattened global row directly instead of
+    concatenating a (K+1, ...) copy through the mesh.  Zero-alpha rows
+    (masked stragglers) contribute exactly nothing."""
     coef = staleness_merge_coefficients(alphas)
-    full = jax.tree_util.tree_map(
-        lambda g, s: jnp.concatenate([g[None].astype(s.dtype), s], axis=0),
-        global_params, stacked)
-    ones = np.ones(coef.shape[0], np.float32)
-    return sharded_aggregate(mesh, full, ones, alphas=coef)
+    # normalize host-side (the coefficients are host scalars already):
+    # entries sum to 1 up to fp, mirroring the reference's in-program
+    # normalization within reassociation tolerance.
+    c = np.where(coef > 0.0, coef, 0.0).astype(np.float64)
+    c = (c / max(c.sum(), 1e-30)).astype(np.float32)
+    buf, treedef, spec = flatten_updates(stacked)
+    n = buf.shape[0]
+    plan = ClientShardingPlan.for_cohort(n, mesh)
+    flat_sum = _merge_fn(mesh)(plan.pad_stacked(buf, mode="zero"),
+                               plan.pad_weights(c[1:]))
+    flat = _fold_global(flat_sum, global_params, jnp.float32(c[0]))
+    merged = unflatten_result(flat, treedef, spec)
+    # unflatten_result restores the STACKED leaves' dtypes; re-cast to
+    # the global model's per-leaf dtypes (identical trees in practice)
+    return jax.tree_util.tree_map(
+        lambda g, m: m.astype(g.dtype), global_params, merged)

@@ -156,5 +156,12 @@ class ShardedClientEngine(BatchedClientEngine):
     def aggregate(self, stacked, weights):
         return sharded_aggregate(self.mesh, stacked, weights)
 
+    def aggregate_or_keep(self, params, stacked, weights):
+        # the all-masked guard rides the psum'd denominator: a
+        # device-side select, no host sync (mirrors the base engine's
+        # lax.cond guard).
+        return sharded_aggregate(self.mesh, stacked, weights,
+                                 fallback=params)
+
     def merge_staleness(self, params, stacked, alphas):
         return sharded_staleness_merge(self.mesh, params, stacked, alphas)

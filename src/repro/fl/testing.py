@@ -1,0 +1,99 @@
+"""Synthetic trainers for runtime tests and server-step benchmarks.
+
+``SyntheticCohortTrainer`` implements the FULL batched trainer
+contract — ``init_params`` / ``local_train`` / jitted
+``local_train_cohort`` with the distributed engine's ``wrap=`` hook /
+``evaluate`` — with a deterministic elementwise update and zero
+model-compile cost, so harnesses can exercise the engine/runtime/store
+hot paths (snapshot gather vs stack, fused merges, history parity)
+without a CNN/LM in the loop.  One definition keeps the parity tests
+(``tests/test_state.py``) and the CI benchmark gate
+(``benchmarks/bench_store.py``) tracking the trainer contract in
+lockstep.
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticCohortTrainer:
+    """Deterministic multi-leaf trainer: the local "training" step adds
+    a per-(client, seed) scalar to every leaf.
+
+    ``leaf_specs`` maps leaf name -> (shape, dtype); the default is a
+    small mixed-dtype tree (f32 matrix, bf16 vector, f32 scalar) that
+    exercises exact store round-trips.  ``local_train`` and the
+    vmappable ``local_train_cohort`` apply the same update, so looped
+    and batched paths agree.
+    """
+
+    DEFAULT_SPECS: Dict[str, Tuple[tuple, object]] = {
+        "w": ((4, 3), jnp.float32),
+        "b": ((6,), jnp.bfloat16),
+        "s": ((), jnp.float32),
+    }
+
+    def __init__(self, leaf_specs: Optional[Dict] = None, *,
+                 arch_id: str = "synthetic", d_client: float = 0.01,
+                 d_seed: float = 0.001, seed_mod: int = 7):
+        self.leaf_specs = dict(leaf_specs or self.DEFAULT_SPECS)
+        self.cfg = SimpleNamespace(arch_id=arch_id)
+        self.d_client, self.d_seed = float(d_client), float(d_seed)
+        self.seed_mod = int(seed_mod)
+        self._cohort = jax.jit(self._cohort_impl)
+
+    @classmethod
+    def many_leaf(cls, n_leaves: int = 24, leaf: int = 256,
+                  **kw) -> "SyntheticCohortTrainer":
+        """Benchmark shape: many uniform f32 leaves, so leaf-by-leaf
+        snapshot stacking cost dominates the dict-of-pytrees arm."""
+        specs = {f"l{i:02d}": ((leaf,), jnp.float32)
+                 for i in range(n_leaves)}
+        kw.setdefault("arch_id", "manyleaf")
+        kw.setdefault("d_client", 1e-3)
+        kw.setdefault("d_seed", 1e-4)
+        kw.setdefault("seed_mod", 13)
+        return cls(specs, **kw)
+
+    def init_params(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        return {name: jnp.asarray(rng.normal(size=shape)
+                                  .astype(np.float32)).astype(dtype)
+                for name, (shape, dtype) in self.leaf_specs.items()}
+
+    def _delta(self, client_id: int, rnd_seed: int) -> float:
+        return ((client_id + 1) * self.d_client
+                + (rnd_seed % self.seed_mod) * self.d_seed)
+
+    def local_train(self, params, client_id: int, rnd_seed: int):
+        d = jnp.float32(self._delta(client_id, rnd_seed))
+        out = jax.tree_util.tree_map(
+            lambda l: (l.astype(jnp.float32) + d).astype(l.dtype), params)
+        return out, 10.0 + client_id
+
+    def _cohort_impl(self, starts, d):
+        return jax.tree_util.tree_map(
+            lambda l: (l.astype(jnp.float32)
+                       + d.reshape((-1,) + (1,) * (l.ndim - 1))
+                       ).astype(l.dtype), starts)
+
+    def local_train_cohort(self, start_params, client_ids, rnd_seeds, *,
+                           wrap=None):
+        d = jnp.asarray(np.asarray(
+            [self._delta(c, s) for c, s in zip(client_ids, rnd_seeds)],
+            np.float32))
+        run = self._cohort if wrap is None else wrap(self._cohort_impl, 0)
+        stacked = run(start_params, d)
+        sizes = np.asarray([10.0 + c for c in client_ids], np.float32)
+        return stacked, sizes
+
+    def evaluate(self, params) -> float:
+        leaves = [np.asarray(l, np.float32).ravel()
+                  for l in jax.tree_util.tree_leaves(params)]
+        return float(np.tanh(np.abs(np.concatenate(leaves)).mean()))

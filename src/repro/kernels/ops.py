@@ -102,6 +102,50 @@ def unflatten_result(flat, treedef, spec):
     return jax.tree_util.tree_unflatten(treedef, outs)
 
 
+# Unstacked variant: a single model pytree <-> one flat (P,) f32 row —
+# the ``ClientStateStore`` convention (a client snapshot is one row of
+# the (N, P) store buffer).  Spec cache shared-format with the stacked
+# path: (offset, size, full leaf shape, dtype).
+_TREE_SPECS: Dict[tuple, List[Tuple[int, int, tuple, object]]] = {}
+
+
+def tree_spec(tree):
+    """-> (treedef, [(offset, size, shape, dtype)], total P) for an
+    UNSTACKED pytree (no leading client axis).  Cached per structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("empty pytree: nothing to flatten")
+    key = (treedef, tuple((tuple(l.shape), str(jnp.asarray(l).dtype))
+                          for l in leaves))
+    cached = _TREE_SPECS.get(key)
+    if cached is None:
+        spec, off = [], 0
+        for l in leaves:
+            size = int(np.prod(np.shape(l), dtype=np.int64))
+            spec.append((off, size, tuple(np.shape(l)),
+                         jnp.asarray(l).dtype))
+            off += size
+        cached = (spec, off)
+        _TREE_SPECS[key] = cached
+    spec, total = cached
+    return treedef, spec, total
+
+
+def flatten_tree(tree):
+    """Model pytree -> ((P,) f32 row, treedef, spec).  f32/bf16/f16
+    leaves round-trip exactly through the f32 row."""
+    treedef, spec, _ = tree_spec(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    return (jnp.concatenate([jnp.asarray(l).reshape(-1).astype(jnp.float32)
+                             for l in leaves]), treedef, spec)
+
+
+# (P,) f32 row -> model pytree: the slicing is identical to the
+# stacked-result unflattener, only the spec's provenance differs
+# (tree_spec's full-shape entries vs flatten_updates' per-row entries)
+unflatten_tree = unflatten_result
+
+
 def fedagg_pytree(stacked_updates, weights, *, alphas=None, block_p=16384,
                   interpret=None):
     """Weighted-average a pytree whose leaves are stacked (N, ...).

@@ -47,6 +47,11 @@ def main(argv=None):
     ap.add_argument("--window-secs", type=float, default=0.0,
                     help="async aggregation window in virtual seconds "
                          "(fedasync/fedbuff; 0 = no time window)")
+    ap.add_argument("--no-store", action="store_true",
+                    help="async methods only: keep client snapshots as "
+                         "a dict of pytrees instead of the "
+                         "device-resident flat ClientStateStore "
+                         "(reference path, bit-identical histories)")
     ap.add_argument("--mesh-clients", type=int, default=0,
                     help="shard cohorts over a 1-D client mesh of N "
                          "devices (0 = single-device engine; on CPU "
@@ -71,6 +76,9 @@ def main(argv=None):
     if args.method in ("fedasync", "fedbuff"):
         kw["window"] = args.window
         kw["window_secs"] = args.window_secs
+    if args.no_store and args.method in ("fedasync", "fedbuff",
+                                         "feddct_async"):
+        kw["use_store"] = False
     hist = run_method(args.method, trainer, net, fl, **kw)
     if hist.accuracy:
         print(f"[fl_train] {args.method} on {args.arch}: "

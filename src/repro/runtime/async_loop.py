@@ -8,6 +8,12 @@ trains as ONE vmapped cohort through the batched execution engine
 seed) before a single fused staleness-weighted merge
 (``alpha_i = alpha * (s_i + 1)^-a`` per row).
 
+Client snapshots live in a device-resident ``ClientStateStore`` — one
+flat (N, P) buffer, gathered per window and re-scattered by the fused
+(donating) merge+scatter program — instead of a ``Dict[int, pytree]``
+of N scattered copies; ``use_store=False`` keeps the dict path as the
+bit-identical A/B reference.
+
 * ``window=0``            -> one event per drain: history-identical to
   the legacy sequential FedAsync implementation (singleton windows take
   the exact legacy code path: ``train_clients`` + ``staleness_merge``).
@@ -26,6 +32,7 @@ a later round, discounted by its staleness.
 
 from __future__ import annotations
 
+import warnings
 from typing import Dict, List
 
 import jax
@@ -35,10 +42,56 @@ from repro.config.base import FLConfig
 from repro.core.aggregation import staleness_merge
 from repro.core.engine import make_engine
 from repro.core.selection import cstt
+from repro.core.state import ClientStateStore
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
 from repro.runtime.buffer import AggregationBuffer
 from repro.runtime.events import ClientEvent, EventQueue
+
+
+def _resolve_store(params, n_clients: int, mesh, use_store,
+                   use_kernel_agg: bool, window_active: bool):
+    """-> ``ClientStateStore`` or ``None`` (the dict-of-pytrees path),
+    applying the store policy in one place:
+
+    * ``use_store=None`` (default) enables the store exactly when
+      windows can batch — a pure ``window=0`` sequential loop has no
+      stacking to amortize, so the dict path's free reference rebind
+      wins there;
+    * ``use_kernel_agg`` merges through the Pallas fedagg path, which
+      the store's fused window step does not dispatch yet (the on-TPU
+      follow-up) — warn and take the dict path so the flag keeps its
+      numerics;
+    * a params template the store cannot hold exactly (non-float
+      leaves) degrades to the dict path instead of failing the default
+      configuration.
+
+    Fallbacks warn only when the caller EXPLICITLY forced
+    ``use_store=True`` — auto-resolution picks the dict path silently
+    (it is exactly the pre-store behavior, nothing asked for is lost).
+    """
+    explicit = use_store is True
+    if use_store is None:
+        use_store = window_active
+    if not use_store:
+        return None
+    if use_kernel_agg:
+        if explicit:
+            warnings.warn(
+                "use_kernel_agg merges through the Pallas fedagg path, "
+                "which the store-backed fused window step does not "
+                "dispatch yet — falling back to the dict-of-pytrees "
+                "snapshot path", stacklevel=3)
+        return None
+    try:
+        return ClientStateStore(params, n_clients, mesh=mesh)
+    except TypeError as e:
+        if explicit:
+            warnings.warn(
+                f"ClientStateStore cannot hold this params pytree ({e}) "
+                "— falling back to the dict-of-pytrees snapshot path",
+                stacklevel=3)
+        return None
 
 
 def _alphas(fl: FLConfig, stalenesses: List[int]) -> List[float]:
@@ -50,9 +103,27 @@ def _alphas(fl: FLConfig, stalenesses: List[int]) -> List[float]:
     return [fl.async_alpha] * len(stalenesses)
 
 
+def _event_seed(e: ClientEvent) -> int:
+    """Data-stream seed of one completion — the legacy formula, shared
+    by the dict and store merge paths so the bit-identity gate cannot
+    drift on a one-sided edit."""
+    return e.rnd * 977 + e.client
+
+
+def _window_alphas(fl: FLConfig, batch: List[ClientEvent],
+                   version: int) -> List[float]:
+    """Per-row merge weights of a drained window: staleness of row i is
+    ``(version + i) - event.version`` — exactly the bookkeeping a
+    one-at-a-time merge loop would produce."""
+    return _alphas(fl, [version + i - e.version
+                        for i, e in enumerate(batch)])
+
+
 def _merge_window(eng, params, snapshots: Dict[int, object],
                   batch: List[ClientEvent], fl: FLConfig, version: int):
-    """Train one drained window and merge it into ``params``.
+    """Train one drained window and merge it into ``params`` (the
+    dict-of-pytrees reference path, kept for A/B tests and benchmarks
+    against the store-backed hot path).
 
     Row order = heap-pop order = sequential merge order; staleness of
     row i is ``(version + i) - event.version`` — exactly the bookkeeping
@@ -63,17 +134,47 @@ def _merge_window(eng, params, snapshots: Dict[int, object],
     if len(batch) == 1:
         e = batch[0]
         stacked, _ = eng.train_clients(snapshots[e.client], [e.client],
-                                       e.rnd * 977 + e.client)
+                                       _event_seed(e))
         new_p = jax.tree_util.tree_map(lambda l: l[0], stacked)
         return staleness_merge(params, new_p,
-                               _alphas(fl, [version - e.version])[0])
+                               _window_alphas(fl, batch, version)[0])
     starts = [snapshots[e.client] for e in batch]
     ids = [e.client for e in batch]
-    seeds = [e.rnd * 977 + e.client for e in batch]
+    seeds = [_event_seed(e) for e in batch]
     stacked, _ = eng.train_cohort(starts, ids, seeds)
-    alphas = _alphas(fl, [version + i - e.version
-                          for i, e in enumerate(batch)])
-    return eng.merge_staleness(params, stacked, alphas)
+    return eng.merge_staleness(params, stacked,
+                               _window_alphas(fl, batch, version))
+
+
+def _merge_window_store(eng, store: ClientStateStore, params,
+                        batch: List[ClientEvent], fl: FLConfig,
+                        version: int):
+    """Store-backed ``_merge_window``: snapshots are gathered from the
+    device-resident (N, P) buffer and the merged window scatters the
+    new global row back in ONE donated program
+    (``engine.train_window``).  Histories are bit-identical to the
+    dict path (gather/scatter round-trips are exact; the merge is the
+    same folded program; padded rows contribute exact zero terms) on
+    backends whose row reduction is sequential — XLA CPU, where the
+    gates run.  A backend that tree-reduces rows may regroup the
+    nonzero terms across the pad boundary, degrading the equality to
+    float tolerance.  A singleton window still takes the legacy train
+    + ``staleness_merge`` path, preserving the ``window=0``
+    sequential-FedAsync gate."""
+    if len(batch) == 1:
+        e = batch[0]
+        stacked, _ = eng.train_clients(store.gather_one(e.client),
+                                       [e.client], _event_seed(e))
+        new_p = jax.tree_util.tree_map(lambda l: l[0], stacked)
+        params = staleness_merge(params, new_p,
+                                 _window_alphas(fl, batch, version)[0])
+        store.scatter_params([e.client], params)
+        return params
+    ids = [e.client for e in batch]
+    seeds = [_event_seed(e) for e in batch]
+    params, _ = eng.train_window(store, params, ids, seeds,
+                                 _window_alphas(fl, batch, version))
+    return params
 
 
 class AsyncRunner:
@@ -84,7 +185,7 @@ class AsyncRunner:
                  method: str = "fedasync", engine: str = "batched",
                  use_kernel_agg: bool = False, window: int = 0,
                  window_secs: float = 0.0, eval_every: int = 5,
-                 verbose: bool = False, mesh=None):
+                 verbose: bool = False, mesh=None, use_store=None):
         self.trainer = trainer
         self.network = network
         self.fl = fl
@@ -96,6 +197,13 @@ class AsyncRunner:
         # (singleton windows keep the legacy single-device merge path,
         # preserving the window=0 history gate).
         self.mesh = mesh
+        # device-resident client-state store: all N snapshots live as
+        # one flat (N, P) buffer.  Tri-state: None (default) = on for
+        # windowed modes, off for the pure sequential window=0 loop;
+        # False = dict-of-pytrees A/B reference (bit-identical
+        # histories, slower server step); True = force (window=0
+        # included).  Resolved by ``_resolve_store`` at run().
+        self.use_store = use_store
         self.buffer = AggregationBuffer(window, window_secs)
         self.eval_every = max(int(eval_every), 1)
         self.verbose = verbose
@@ -103,20 +211,27 @@ class AsyncRunner:
 
     def run(self) -> RunHistory:
         fl, net = self.fl, self.network
-        hist = RunHistory(
-            method=self.method, arch=self.trainer.cfg.arch_id,
-            meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
-                  "alpha": fl.async_alpha, "a": fl.async_a,
-                  "engine": self.engine, "window": self.buffer.window,
-                  "window_secs": self.buffer.window_secs})
         eng = make_engine(self.trainer, use_kernel_agg=self.use_kernel_agg,
                           engine=self.engine, mesh=self.mesh)
         params = self.trainer.init_params(fl.seed)
         # true async: each client trains from the global model snapshot
         # taken when it STARTED (not finished) — staleness weights exist
         # to correct exactly that lag.
-        snapshots: Dict[int, object] = {c: params
-                                        for c in range(fl.n_clients)}
+        store = _resolve_store(
+            params, fl.n_clients, self.mesh, self.use_store,
+            self.use_kernel_agg,
+            window_active=(self.buffer.window > 0
+                           or self.buffer.window_secs > 0))
+        snapshots: Dict[int, object] = {}
+        if store is None:
+            snapshots = {c: params for c in range(fl.n_clients)}
+        hist = RunHistory(
+            method=self.method, arch=self.trainer.cfg.arch_id,
+            meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
+                  "alpha": fl.async_alpha, "a": fl.async_a,
+                  "engine": self.engine, "window": self.buffer.window,
+                  "window_secs": self.buffer.window_secs,
+                  "store": store is not None})
         first = net.delays(np.arange(fl.n_clients), 0)
         q = EventQueue([ClientEvent(float(t), c, 0, 0, cost=float(t))
                         for c, t in enumerate(first)])
@@ -131,14 +246,21 @@ class AsyncRunner:
             # windows close at anchor + window_secs (the server must wait
             # out the deadline — it cannot know nothing else is coming)
             clock = self.buffer.close_time(batch, limit=limit)
-            params = _merge_window(eng, params, snapshots, batch, fl,
-                                   version)
+            if store is not None:
+                # the merged clients' snapshot rows are re-scattered
+                # inside the fused window step itself
+                params = _merge_window_store(eng, store, params, batch,
+                                             fl, version)
+            else:
+                params = _merge_window(eng, params, snapshots, batch, fl,
+                                       version)
             version += len(batch)
             self.cohort_sizes.append(len(batch))
             rnds = np.asarray([e.rnd + 1 for e in batch])
             nxt = net.delays([e.client for e in batch], rnds)
             for e, t in zip(batch, nxt):
-                snapshots[e.client] = params
+                if store is None:
+                    snapshots[e.client] = params
                 q.push(ClientEvent(clock + float(t), e.client, version,
                                    e.rnd + 1, cost=float(t)))
             prev_upd, upd = upd, upd + len(batch)
@@ -167,7 +289,7 @@ class AsyncRunner:
 def run_feddct_async(trainer, network, fl: FLConfig, *,
                      engine: str = "batched", use_kernel_agg: bool = False,
                      verbose: bool = False, eval_every: int = 1,
-                     mesh=None) -> RunHistory:
+                     mesh=None, use_store=None) -> RunHistory:
     """Semi-async FedDCT: tier timeouts become aggregation windows.
 
     Per round: dynamic tiering + CSTT selection exactly as the sync
@@ -181,15 +303,21 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     client's running-average time).
     """
     rng = np.random.default_rng(fl.seed + 19)
+    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
+                      mesh=mesh)
+    params = trainer.init_params(fl.seed)
+    # snapshot-at-selection state: store rows (device-resident flat
+    # buffer) by default — tier windows always batch — with the
+    # dict-of-pytrees path as the A/B reference (use_store=False)
+    store = _resolve_store(params, fl.n_clients, mesh, use_store,
+                           use_kernel_agg, window_active=True)
     hist = RunHistory(method="feddct_async", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
                             "omega": fl.omega, "tau": fl.tau,
                             "n_tiers": fl.n_tiers, "engine": engine,
-                            "alpha": fl.async_alpha, "a": fl.async_a})
-    eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
-                      mesh=mesh)
-    params = trainer.init_params(fl.seed)
+                            "alpha": fl.async_alpha, "a": fl.async_a,
+                            "store": store is not None})
     clock = 0.0
 
     # initial kappa-round evaluation of every client (parallel), exactly
@@ -228,9 +356,13 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
             for (c, k), st in zip(selected, sts):
                 q.push(ClientEvent(clock + float(st), c, version, rnd,
                                    cost=float(st)))
-                snapshots[c] = params
+                if store is None:
+                    snapshots[c] = params
                 inflight[c] = k
                 used.add(k)
+            if store is not None and selected:
+                # one scatter snapshots the whole selection at once
+                store.scatter_params([c for c, _ in selected], params)
             if used:
                 deadline = clock + max(min(d_max[k], fl.omega)
                                        for k in used)
@@ -238,8 +370,12 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
 
         batch = AggregationBuffer.drain_until(q, deadline)
         if batch:
-            params = _merge_window(eng, params, snapshots, batch, fl,
-                                   version)
+            if store is not None:
+                params = _merge_window_store(eng, store, params, batch,
+                                             fl, version)
+            else:
+                params = _merge_window(eng, params, snapshots, batch, fl,
+                                       version)
             version += len(batch)
             cohort_sizes.append(len(batch))
             for e in batch:

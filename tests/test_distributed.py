@@ -441,6 +441,46 @@ def test_fedasync_window0_gate_holds_with_one_device_mesh():
 
 
 @multi_device
+def test_client_state_store_sharded_matches_plain():
+    """The store's row axis shards over the client mesh (rows padded to
+    a mesh multiple via ClientShardingPlan); gathers/scatters and the
+    fused merge+scatter must match the single-device store within
+    float tolerance."""
+    from repro.core.aggregation import staleness_merge_coefficients
+    from repro.core.state import ClientStateStore
+    mesh = make_client_mesh()
+    template = {"f32": jnp.asarray(np.arange(15.0, dtype=np.float32)
+                                   .reshape(5, 3)),
+                "bf16": jnp.asarray(np.arange(7.0, dtype=np.float32)
+                                    ).astype(jnp.bfloat16),
+                "scalar": jnp.float32(0.5)}
+    other = jax.tree_util.tree_map(lambda l: l * 2.0 + 1.0, template)
+    plain = ClientStateStore(template, 12)
+    shard = ClientStateStore(template, 12, mesh=mesh)
+    assert shard.rows % int(mesh.size) == 0 and shard.rows >= 12
+
+    for s in (plain, shard):
+        s.scatter_params([3, 5], other)
+    for c in (0, 3, 5, 11):
+        _assert_tree_close(shard.gather_one(c), plain.gather_one(c),
+                           rtol=0, atol=0, bf16_tol=0)
+
+    # stacked updates share the template's structure / per-row shapes
+    stacked = {"f32": jnp.broadcast_to(template["f32"], (8, 5, 3)) * 1.1,
+               "bf16": (jnp.ones((8, 7), jnp.float32) * 0.3
+                        ).astype(jnp.bfloat16),
+               "scalar": jnp.arange(8.0, dtype=jnp.float32)}
+    alphas = 0.6 * (np.arange(8, dtype=np.float64) + 1.0) ** -0.5
+    alphas[2] = 0.0
+    coef = staleness_merge_coefficients(alphas)
+    ids = list(range(8))
+    pp, _ = plain.merge_scatter(ids, stacked, coef, template)
+    ps, _ = shard.merge_scatter(ids, stacked, coef, template)
+    _assert_tree_close(ps, pp)
+    _assert_tree_close(shard.gather_one(4), plain.gather_one(4))
+
+
+@multi_device
 def test_fedasync_windowed_sharded_matches_single_device():
     """Windowed async cohorts train sharded and merge within tolerance
     of the single-device runtime."""

@@ -1,0 +1,407 @@
+"""Device-resident flat client-state store (``ClientStateStore``):
+exact mixed-dtype gather/scatter round-trips, donation safety under
+repeated in-place updates, the fused merge+scatter program, the
+device-side all-masked round guard, and — the acceptance gate —
+bit-identical ``RunHistory`` store vs dict-of-pytrees paths for
+``fedasync(window=0/K)``, ``fedbuff`` and ``feddct_async``."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import FLConfig
+from repro.core.aggregation import (aggregate_or_keep,
+                                    staleness_merge_coefficients,
+                                    staleness_weighted_merge)
+from repro.core.baselines import run_fedasync, run_fedbuff
+from repro.core.engine import make_engine
+from repro.core.state import ClientStateStore
+from repro.fl.network import WirelessNetwork
+from repro.fl.testing import SyntheticCohortTrainer
+from repro.runtime.async_loop import run_feddct_async
+
+
+def _template(seed=0):
+    """Mixed-dtype model pytree: 2-d f32, bf16 vector, f16 vector,
+    scalar — every leaf dtype round-trips exactly through f32 rows."""
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(5,)).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+        "h": jnp.asarray(rng.normal(size=(3,)).astype(np.float32)
+                         ).astype(jnp.float16),
+        "s": jnp.float32(rng.normal()),
+    }
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# flat row <-> pytree round-trips
+# ---------------------------------------------------------------------------
+
+def test_flatten_unflatten_roundtrip_exact_mixed_dtypes():
+    t = _template(1)
+    store = ClientStateStore(t, 4)
+    flat = store.flatten(t)
+    assert flat.dtype == jnp.float32 and flat.shape == (store.p,)
+    _tree_equal(store.unflatten(flat), t)
+
+
+def test_store_initializes_every_row_to_template():
+    t = _template(2)
+    store = ClientStateStore(t, 5)
+    for c in (0, 2, 4):
+        _tree_equal(store.gather_one(c), t)
+    stacked = store.gather([1, 3])
+    for i in range(2):
+        _tree_equal(jax.tree_util.tree_map(lambda l: l[i], stacked), t)
+
+
+def test_store_rejects_non_float_leaves():
+    with pytest.raises(TypeError):
+        ClientStateStore({"i": jnp.arange(3)}, 2)
+    with pytest.raises(ValueError):
+        ClientStateStore(_template(), 0)
+
+
+def test_scatter_params_targets_only_given_rows():
+    t0, t1 = _template(3), _template(4)
+    store = ClientStateStore(t0, 6)
+    row = store.scatter_params([1, 4], t1)
+    assert row.shape == (store.p,)
+    _tree_equal(store.gather_one(1), t1)
+    _tree_equal(store.gather_one(4), t1)
+    _tree_equal(store.gather_one(0), t0)
+    _tree_equal(store.gather_one(5), t0)
+
+
+def test_gather_duplicate_and_padded_ids():
+    t0, t1 = _template(5), _template(6)
+    store = ClientStateStore(t0, 4)
+    store.scatter_params([2], t1)
+    stacked = store.gather([2, 2, 0, 2])       # duplicates = pad slots
+    row = lambda i: jax.tree_util.tree_map(lambda l: l[i], stacked)
+    _tree_equal(row(0), t1)
+    _tree_equal(row(1), t1)
+    _tree_equal(row(2), t0)
+    _tree_equal(row(3), t1)
+
+
+def test_scatter_flat_row_with_duplicate_ids():
+    t0, t1 = _template(7), _template(8)
+    store = ClientStateStore(t0, 4)
+    store.scatter([3, 3, 1], store.flatten(t1))
+    _tree_equal(store.gather_one(3), t1)
+    _tree_equal(store.gather_one(1), t1)
+    _tree_equal(store.gather_one(0), t0)
+
+
+# ---------------------------------------------------------------------------
+# fused merge + scatter
+# ---------------------------------------------------------------------------
+
+def test_merge_scatter_matches_folded_merge_bitwise():
+    rng = np.random.default_rng(9)
+    g = _template(9)
+    store = ClientStateStore(g, 8)
+    stacked = _stack([_template(20 + i) for i in range(4)])
+    alphas = [0.6, 0.3, 0.0, 0.45]             # one masked straggler
+    coef = staleness_merge_coefficients(alphas)
+    new_params, new_g = store.merge_scatter([0, 2, 5, 7], stacked, coef, g)
+    want = staleness_weighted_merge(g, stacked, alphas)
+    _tree_equal(new_params, want)
+    # merged clients' rows now hold the new global; others untouched
+    for c in (0, 2, 5, 7):
+        _tree_equal(store.gather_one(c), new_params)
+    _tree_equal(store.gather_one(1), g)
+    np.testing.assert_array_equal(np.asarray(new_g),
+                                  np.asarray(store.flatten(new_params)))
+
+
+def test_merge_scatter_zero_coef_pad_rows_are_exact_noops():
+    """Padded rows (repeat-last ids, coefficient 0) must not change the
+    merge by a single bit — the engine's fused-window convention."""
+    g = _template(10)
+    alphas = [0.5, 0.25, 0.7]
+    trees = [_template(30 + i) for i in range(3)]
+    coef = staleness_merge_coefficients(alphas)
+
+    s1 = ClientStateStore(g, 8)
+    p1, _ = s1.merge_scatter([1, 2, 3], _stack(trees), coef, g)
+
+    s2 = ClientStateStore(g, 8)
+    padded = _stack(trees + [trees[-1]])       # engine edge padding
+    coef_pad = np.concatenate([coef, np.zeros(1, np.float32)])
+    p2, _ = s2.merge_scatter([1, 2, 3, 3], padded, coef_pad, g)
+    _tree_equal(p1, p2)
+
+
+def test_merge_scatter_masks_nonfinite_zero_coef_rows():
+    g = _template(11)
+    store = ClientStateStore(g, 4)
+    bad = jax.tree_util.tree_map(lambda l: l * np.nan, _template(12))
+    stacked = _stack([_template(13), bad])
+    alphas = [0.4, 0.0]                        # nan row fully masked
+    coef = staleness_merge_coefficients(alphas)
+    new_params, _ = store.merge_scatter([0, 1], stacked, coef, g)
+    for l in jax.tree_util.tree_leaves(new_params):
+        assert np.isfinite(np.asarray(l, np.float32)).all()
+
+
+def test_repeated_inplace_updates_no_use_after_donate():
+    """scatter/merge_scatter donate the buffer: the store must rebind
+    and keep serving gathers across many cycles (donation is active on
+    accelerator backends; this exercises the rebind discipline)."""
+    g = _template(14)
+    store = ClientStateStore(g, 6)
+    params = g
+    for it in range(5):
+        t = _template(40 + it)
+        store.scatter_params([it % 6], t)
+        stacked = _stack([t, _template(50 + it)])
+        coef = staleness_merge_coefficients([0.5, 0.25])
+        params, _ = store.merge_scatter([it % 6, (it + 1) % 6], stacked,
+                                        coef, params)
+        _tree_equal(store.gather_one(it % 6), params)
+    assert store.buffer.shape == (6, store.p)
+
+
+# ---------------------------------------------------------------------------
+# device-side all-masked round guard
+# ---------------------------------------------------------------------------
+
+def test_aggregate_or_keep_all_masked_returns_params():
+    params = {"w": jnp.asarray([1.0, 2.0], jnp.float32)}
+    stacked = {"w": jnp.asarray([[9.0, 9.0], [np.nan, np.inf]],
+                                jnp.float32)}
+    out = aggregate_or_keep(params, stacked, np.zeros(2, np.float32))
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(params["w"]))
+
+
+def test_aggregate_or_keep_matches_weighted_average_when_unmasked():
+    from repro.core.aggregation import weighted_average_stacked
+    rng = np.random.default_rng(15)
+    params = {"w": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+    stacked = {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))}
+    w = np.asarray([1.0, 0.0, 2.0, 0.5], np.float32)
+    out = aggregate_or_keep(params, stacked, w)
+    want = weighted_average_stacked(stacked, w)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(want["w"]))
+
+
+def test_train_round_all_masked_weights_keeps_params():
+    class T:
+        class cfg:
+            arch_id = "t"
+
+        def local_train(self, params, client_id, rnd_seed):
+            return {"w": params["w"] + client_id + 1.0}, 10.0
+
+    eng = make_engine(T())
+    p = {"w": jnp.zeros(3, jnp.float32)}
+    out = eng.train_round(p, [0, 1], 0, weights=[0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.zeros(3))
+    assert eng.train_round(p, [], 0) is p      # empty cohort: host early-out
+
+
+# ---------------------------------------------------------------------------
+# trainers for the history-parity gates (no model-compile cost)
+# ---------------------------------------------------------------------------
+
+class FakeLoopTrainer:
+    """Deterministic linear updates, looped path only (exercises the
+    store's gather_one + stacked-fallback merge)."""
+
+    class cfg:
+        arch_id = "fake"
+
+    def init_params(self, seed=0):
+        return {"w": jnp.zeros(3, jnp.float32)}
+
+    def local_train(self, params, client_id, rnd_seed):
+        return {"w": params["w"] + (client_id + 1.0)}, 10.0 + client_id
+
+    def evaluate(self, params):
+        return float(np.clip(np.mean(np.asarray(params["w"])) / 100.0,
+                             0.0, 1.0))
+
+
+# the shared synthetic cohort trainer (mixed-dtype default tree)
+# exercises the store's fused gather -> cohort train -> merge+scatter
+# hot path without CNN compile cost
+TinyCohortTrainer = SyntheticCohortTrainer
+
+
+def _net(fl):
+    return WirelessNetwork(fl.n_clients, fl.tier_delay_means, fl.delay_std,
+                           fl.mu, fl.failure_delay, fl.seed)
+
+
+def _hist_equal(ha, hb):
+    assert ha.rounds == hb.rounds
+    assert ha.times == hb.times
+    assert ha.accuracy == hb.accuracy
+    assert ha.n_selected == hb.n_selected
+    assert ha.n_stragglers == hb.n_stragglers
+
+
+# ---------------------------------------------------------------------------
+# acceptance gate: bit-identical histories, store vs dict-of-pytrees
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("trainer_cls", [FakeLoopTrainer,
+                                         TinyCohortTrainer])
+@pytest.mark.parametrize("window,window_secs", [(0, 0.0), (3, 0.0),
+                                                (0, 25.0)])
+def test_fedasync_store_history_identical_to_dict(trainer_cls, window,
+                                                  window_secs):
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=4, seed=3)
+    hs = run_fedasync(trainer_cls(), _net(fl), fl, window=window,
+                      window_secs=window_secs, eval_every=4,
+                      use_store=True)
+    hd = run_fedasync(trainer_cls(), _net(fl), fl, window=window,
+                      window_secs=window_secs, eval_every=4,
+                      use_store=False)
+    _hist_equal(hs, hd)
+    if window or window_secs:
+        assert hs.meta["mean_cohort"] > 1.0    # windows actually batched
+
+
+@pytest.mark.parametrize("trainer_cls", [FakeLoopTrainer,
+                                         TinyCohortTrainer])
+def test_fedbuff_store_history_identical_to_dict(trainer_cls):
+    fl = FLConfig(n_clients=6, tau=2, rounds=4, seed=2)
+    hs = run_fedbuff(trainer_cls(), _net(fl), fl, window=2, eval_every=8,
+                     use_store=True)
+    hd = run_fedbuff(trainer_cls(), _net(fl), fl, window=2, eval_every=8,
+                     use_store=False)
+    _hist_equal(hs, hd)
+    assert hs.meta["mean_cohort"] == 2.0
+
+
+@pytest.mark.parametrize("trainer_cls", [FakeLoopTrainer,
+                                         TinyCohortTrainer])
+def test_feddct_async_store_history_identical_to_dict(trainer_cls):
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                  seed=5, beta=1.1)
+    hs = run_feddct_async(trainer_cls(), _net(fl), fl, use_store=True)
+    hd = run_feddct_async(trainer_cls(), _net(fl), fl, use_store=False)
+    _hist_equal(hs, hd)
+    assert hs.meta["n_drains"] >= 1
+
+
+def test_engine_train_window_matches_cohort_plus_merge():
+    """The fused store window must reproduce the dict path's
+    train_cohort + merge_staleness composition bit for bit."""
+    tr = TinyCohortTrainer()
+    eng = make_engine(tr)
+    g = tr.init_params(0)
+    starts = [tr.init_params(i + 1) for i in range(3)]
+    ids, seeds = [4, 1, 6], [11, 22, 33]
+    alphas = [0.5, 0.0, 0.3]
+
+    store = ClientStateStore(g, 8)
+    for c, t in zip(ids, starts):
+        store.scatter_params([c], t)
+    new_params, _ = eng.train_window(store, g, ids, seeds, alphas)
+
+    eng2 = make_engine(tr)
+    stacked, _ = eng2.train_cohort(starts, ids, seeds)
+    want = eng2.merge_staleness(g, stacked, alphas)
+    _tree_equal(new_params, want)
+
+
+def test_use_store_default_is_windowed_only():
+    """Tri-state default: the store engages exactly when windows can
+    batch — the pure window=0 sequential loop keeps the dict path's
+    free reference rebind (no per-event gather/scatter round-trip)."""
+    fl = FLConfig(n_clients=6, tau=2, rounds=2, seed=6)
+    h0 = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=0,
+                      eval_every=8)
+    assert h0.meta["store"] is False
+    hw = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=2,
+                      eval_every=8)
+    assert hw.meta["store"] is True
+    hf = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=0,
+                      eval_every=8, use_store=True)   # explicit force
+    assert hf.meta["store"] is True
+    _hist_equal(h0, hf)                               # still identical
+
+
+def test_non_float_template_falls_back_to_dict_with_warning():
+    """A trainer whose params carry a non-float leaf cannot live in the
+    f32 store — the runner must degrade to the dict path, not crash."""
+
+    class IntLeafTrainer(FakeLoopTrainer):
+        def init_params(self, seed=0):
+            return {"w": jnp.zeros(3, jnp.float32),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        def local_train(self, params, client_id, rnd_seed):
+            return {"w": params["w"] + (client_id + 1.0),
+                    "step": params["step"] + 1}, 10.0 + client_id
+
+    fl = FLConfig(n_clients=4, tau=2, rounds=2, seed=7)
+    with pytest.warns(UserWarning, match="ClientStateStore"):
+        hs = run_fedbuff(IntLeafTrainer(), _net(fl), fl, window=2,
+                         eval_every=8, use_store=True)
+    assert hs.meta["store"] is False
+    hd = run_fedbuff(IntLeafTrainer(), _net(fl), fl, window=2,
+                     eval_every=8, use_store=False)
+    _hist_equal(hs, hd)
+
+
+def test_kernel_agg_falls_back_to_dict_path_with_warning():
+    """The store's fused merge does not dispatch the Pallas fedagg
+    kernel yet: combining use_kernel_agg with the store must warn and
+    take the dict path, keeping kernel-merge numerics intact."""
+    fl = FLConfig(n_clients=6, tau=2, rounds=2, seed=4)
+    with pytest.warns(UserWarning, match="use_kernel_agg"):
+        hk = run_fedbuff(TinyCohortTrainer(), _net(fl), fl, window=2,
+                         eval_every=8, use_store=True,
+                         use_kernel_agg=True)
+    assert hk.meta["store"] is False
+    hd = run_fedbuff(TinyCohortTrainer(), _net(fl), fl, window=2,
+                     eval_every=8, use_store=False, use_kernel_agg=True)
+    _hist_equal(hk, hd)
+    # auto-resolution (use_store=None) picks the dict path SILENTLY —
+    # it is exactly the pre-store behavior, nothing asked for is lost
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ha = run_fedbuff(TinyCohortTrainer(), _net(fl), fl, window=2,
+                         eval_every=8, use_kernel_agg=True)
+    assert ha.meta["store"] is False
+    _hist_equal(ha, hd)
+
+
+@pytest.mark.slow
+def test_fedasync_windowed_cnn_store_history_identical_to_dict():
+    from repro.config import get_arch
+    from repro.fl.client import CNNTrainer
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=3, mu=0.0,
+                  primary_frac=0.7, seed=0, lr=0.003)
+    tr = CNNTrainer(get_arch("cnn-mnist").reduced(), fl, "mnist",
+                    scale=0.01)
+    hs = run_fedasync(tr, _net(fl), fl, window_secs=15.0, eval_every=4,
+                      use_store=True)
+    hd = run_fedasync(tr, _net(fl), fl, window_secs=15.0, eval_every=4,
+                      use_store=False)
+    _hist_equal(hs, hd)
+    assert hs.meta["mean_cohort"] > 1.0
