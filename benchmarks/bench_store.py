@@ -43,7 +43,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from common import add_json_arg, maybe_write_json, time_fn
+from common import add_json_arg, maybe_write_json, time_fn, timed_reps
 from repro.config.base import FLConfig
 from repro.core.state import ClientStateStore
 from repro.fl.network import WirelessNetwork
@@ -60,12 +60,13 @@ def ManyLeafTrainer():
 
 def run_arm(trainer, fl, seed, *, use_store: bool, window: int,
             reps: int):
-    """Best-of-``reps`` events/sec over identical realizations (the
-    shared trainer keeps both arms' jit caches warm after the warmup
-    pass, so reps measure steady-state server overhead)."""
-    best = None
-    hist = None
-    for _ in range(reps):
+    """``reps`` timed runs over identical realizations (the shared
+    trainer keeps both arms' jit caches warm after the warmup pass, so
+    reps measure steady-state server overhead); best-rep summary +
+    median-of-reps gate statistic via ``common.timed_reps``."""
+    hists = []
+
+    def once():
         net = WirelessNetwork(fl.n_clients, fl.tier_delay_means,
                               fl.delay_std, fl.mu, fl.failure_delay, seed)
         runner = AsyncRunner(trainer, net, fl, window=window,
@@ -74,14 +75,12 @@ def run_arm(trainer, fl, seed, *, use_store: bool, window: int,
         t0 = time.perf_counter()
         hist = runner.run()
         wall = time.perf_counter() - t0
-        events = sum(runner.cohort_sizes)
-        eps = events / wall
-        if best is None or eps > best["events_per_sec"]:
-            best = {"wall_s": wall, "events": events,
-                    "events_per_sec": eps,
-                    "mean_cohort": hist.meta["mean_cohort"],
-                    "n_drains": hist.meta["n_drains"]}
-    return best, hist
+        hists.append(hist)
+        return wall, sum(runner.cohort_sizes), {
+            "mean_cohort": hist.meta["mean_cohort"],
+            "n_drains": hist.meta["n_drains"]}
+
+    return timed_reps(once, reps), hists[-1]
 
 
 def stacking_microbench(cohort: int):
@@ -127,6 +126,9 @@ def main(argv=None):
     if args.smoke:
         args.clients, args.rounds, args.tau = 32, 16, 8
         args.window = 16
+        # the gate compares MEDIAN-of-3 events/sec: one descheduled
+        # rep on a noisy 2-core CI box cannot flip the verdict
+        args.reps = 3
 
     fl = FLConfig(n_clients=args.clients, n_tiers=4, tau=args.tau,
                   rounds=args.rounds, mu=0.0, primary_frac=0.7,
@@ -157,20 +159,33 @@ def main(argv=None):
                  and hs.accuracy == hd.accuracy)
     speedup = (results["store"]["events_per_sec"]
                / results["dict"]["events_per_sec"])
+    speedup_median = (results["store"]["events_per_sec_median"]
+                      / results["dict"]["events_per_sec_median"])
     micro = stacking_microbench(16)
     results["speedup"] = speedup
+    results["speedup_median"] = speedup_median
     results["histories_identical"] = identical
     results["stacking_cohort16"] = micro
-    print(f"[bench_store] store/dict events/sec: {speedup:.2f}x  "
+    print(f"[bench_store] store/dict events/sec: {speedup:.2f}x "
+          f"(median {speedup_median:.2f}x)  "
           f"histories {'IDENTICAL' if identical else 'MISMATCH'}")
     print(f"[bench_store] cohort-16 snapshot assembly: "
           f"tree_map(stack)={micro['stack_us']:8.1f}us  "
           f"store.gather={micro['store_gather_us']:8.1f}us")
 
-    maybe_write_json(args, "store", results)
+    maybe_write_json(args, "store", results, extra_context={
+        "store_arm_path": hs.meta.get("store_path"),
+        "dict_arm_path": hd.meta.get("store_path"),
+        "kernel_agg": hs.meta.get("kernel_agg"),
+    })
     if args.smoke:
-        ok = (identical and speedup > 1.0
-              and results["store"]["mean_cohort"] > 1.0)
+        # history identity stays STRICT (bitwise); only the timing
+        # comparison is deflaked via the median.  The arms must also
+        # have RESOLVED to the snapshot paths they claim to measure.
+        ok = (identical and speedup_median > 1.0
+              and results["store"]["mean_cohort"] > 1.0
+              and hs.meta.get("store_path") == "store"
+              and hd.meta.get("store_path") == "dict")
         print(f"[bench_store] smoke {'PASS' if ok else 'FAIL'}")
         raise SystemExit(0 if ok else 1)
     return results

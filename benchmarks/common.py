@@ -36,39 +36,43 @@ def add_json_arg(ap, name: str):
              f"benchmarks/BENCH_{name}.json; pass PATH to override)")
 
 
-def write_bench_json(name: str, results: Dict, path: Optional[str] = None
-                     ) -> str:
+def write_bench_json(name: str, results: Dict, path: Optional[str] = None,
+                     extra_context: Optional[Dict] = None) -> str:
     """Dump one benchmark run as ``{"bench", "context", "results"}``.
 
     ``results`` is the harness's own dict (arms, speedups, gates);
     ``context`` records enough environment to compare trajectories
-    across PRs.  Returns the path written."""
+    across PRs.  ``extra_context`` lets a harness record run-resolved
+    facts the argv cannot show — e.g. which snapshot path
+    (store/dict) and merge dispatch (kernel/jnp) actually ran — so
+    trajectory points stay comparable across PRs that change the
+    defaults.  Returns the path written."""
     out = path or os.path.join(os.path.dirname(__file__),
                                f"BENCH_{name}.json")
     import jax
-    payload = {
-        "bench": name,
-        "context": {
-            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-            "python": platform.python_version(),
-            "jax": jax.__version__,
-            "backend": jax.default_backend(),
-            "device_count": jax.device_count(),
-            "cpu_count": os.cpu_count(),
-            "argv": sys.argv[1:],
-        },
-        "results": results,
+    context = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "argv": sys.argv[1:],
     }
+    context.update(extra_context or {})
+    payload = {"bench": name, "context": context, "results": results}
     with open(out, "w") as f:
         json.dump(payload, f, indent=2, default=float)
     print(f"[{name}] json -> {out}")
     return out
 
 
-def maybe_write_json(args, name: str, results: Dict):
+def maybe_write_json(args, name: str, results: Dict,
+                     extra_context: Optional[Dict] = None):
     """Honor ``add_json_arg``'s flag if the caller passed it."""
     if getattr(args, "json", None) is not None:
-        write_bench_json(name, results, path=args.json or None)
+        write_bench_json(name, results, path=args.json or None,
+                         extra_context=extra_context)
 
 
 def run_fl_experiment(*, arch: str, method: str, mu: float,
@@ -97,6 +101,30 @@ def run_fl_experiment(*, arch: str, method: str, mu: float,
     hist = run_method(method, trainer, net, fl, eval_every=eval_every)
     hist.save(path)
     return hist
+
+
+def timed_reps(run_once, reps: int) -> Dict:
+    """Shared deflaked-arm summary for the A/B harnesses.
+
+    ``run_once()`` -> ``(wall_s, events, extra_dict)`` for one timed
+    run.  Returns the BEST rep's numbers (the low-noise headline)
+    merged with its extras, plus ``events_per_sec_median`` across reps
+    — the smoke-gate statistic (a single descheduled rep on a busy
+    2-core CI box can invert a best-of comparison) — and the raw
+    ``events_per_sec_samples``.  One definition keeps every harness's
+    gate measuring the same statistic."""
+    samples: List[float] = []
+    best = None
+    for _ in range(reps):
+        wall, events, extra = run_once()
+        eps = events / wall
+        samples.append(eps)
+        if best is None or eps > best["events_per_sec"]:
+            best = {"wall_s": wall, "events": events,
+                    "events_per_sec": eps, **extra}
+    best["events_per_sec_median"] = float(np.median(samples))
+    best["events_per_sec_samples"] = samples
+    return best
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:

@@ -192,19 +192,17 @@ def staleness_weighted_merge(global_params, stacked, alphas, *,
     weight vector is allocated.  Zero-alpha rows (masked stragglers)
     contribute exactly nothing.
 
-    ``use_kernel=True`` routes through the Pallas fedagg kernel, which
-    reduces materialized rows — that path still stacks the global
-    model in as row 0 (the kernel is the on-TPU dispatch; CPU tests
-    run it in interpret mode only).
+    ``use_kernel=True`` routes through the folded Pallas fedagg kernel
+    (``fedagg_fold_pytree``): the same implicit-row-0 formulation on
+    the flattened (K, P) buffer — no (K+1, ...) concatenated copy
+    there either.  The kernel runs interpret-mode on CPU and compiled
+    on TPU; the store-backed fused window step dispatches the SAME
+    program on the same flattened buffer, so kernel-path histories are
+    bit-identical between the dict and store snapshot paths.
     """
     coef = staleness_merge_coefficients(alphas)
     if use_kernel:
-        from repro.kernels import fedagg_pytree
-        full = jax.tree_util.tree_map(
-            lambda g, s: jnp.concatenate(
-                [g[None].astype(s.dtype), s], axis=0),
-            global_params, stacked)
-        ones = jnp.ones(coef.shape[0], jnp.float32)
-        return fedagg_pytree(full, ones, alphas=jnp.asarray(coef),
-                             interpret=interpret)
+        from repro.kernels import fedagg_fold_pytree
+        return fedagg_fold_pytree(global_params, stacked,
+                                  jnp.asarray(coef), interpret=interpret)
     return _merge_folded_jnp(global_params, stacked, jnp.asarray(coef))

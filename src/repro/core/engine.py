@@ -194,9 +194,12 @@ class BatchedClientEngine:
 
         The snapshot gather, the merge, the new-global flatten and the
         scatter each run as one device program per padded cohort-size
-        bucket (the merge+scatter program donates the store buffer);
+        bucket (the merge+scatter program donates the store buffers);
         padded rows ride through the merge with coefficient 0 instead
-        of being sliced off, so there is no post-hoc host repack.
+        of being sliced off, so there is no post-hoc host repack.  The
+        merge dispatches the folded Pallas fedagg kernel when the
+        engine was built with ``use_kernel_agg`` (interpret-mode on
+        CPU, compiled on TPU) — the same program the dict path runs.
         Returns ``(new_params, new_global_flat)``.
         """
         ids = [int(c) for c in client_ids]
@@ -205,6 +208,8 @@ class BatchedClientEngine:
         if n == 0:
             return params, store.flatten(params)
         coef = staleness_merge_coefficients(alphas)
+        merge_kw = dict(use_kernel=self.use_kernel_agg,
+                        interpret=self.interpret)
         if self._can_cohort:
             run_ids, run_seeds = self._pad_pow2(ids, seeds)
             starts = store.gather(run_ids)
@@ -213,7 +218,8 @@ class BatchedClientEngine:
                                                       run_seeds)
                 pad = np.zeros(len(run_ids) - n, np.float32)
                 return store.merge_scatter(
-                    run_ids, stacked, np.concatenate([coef, pad]), params)
+                    run_ids, stacked, np.concatenate([coef, pad]), params,
+                    **merge_kw)
             except NotImplementedError:
                 self._can_cohort = False
         # looped fallback (trainers without local_train_cohort): rows
@@ -226,7 +232,8 @@ class BatchedClientEngine:
             lambda *xs: jnp.stack(xs), *trees)
         pad = np.zeros(len(run_ids) - n, np.float32)
         return store.merge_scatter(run_ids, stacked,
-                                   np.concatenate([coef, pad]), params)
+                                   np.concatenate([coef, pad]), params,
+                                   **merge_kw)
 
 
 def make_engine(trainer, *, use_kernel_agg: bool = False,

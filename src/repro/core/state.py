@@ -6,16 +6,17 @@ leaf by leaf (``tree_map(jnp.stack)``) on every drained window before
 the cohort could train.  The flatten-once ``(N, P)`` representation the
 Pallas fedagg kernel already uses for aggregation is the natural home
 for that state instead: ``ClientStateStore`` holds every client's
-snapshot as one row of a single device-resident ``(N, P)`` f32 buffer,
-with the unflatten spec (per-leaf offset/size/shape/dtype views) cached
-once at construction.
+snapshot as one row of a single device-resident ``(N, P)`` f32 buffer
+— plus, for models that carry non-float state (step counters, masks),
+a sidecar ``(N, Pi)`` int32 segment — with the unflatten spec (per-leaf
+segment/offset/shape/dtype views) cached once at construction.
 
 * ``gather(ids)`` returns the stacked start-params pytree for a cohort
   (one device program: row gather + per-leaf slice/reshape/cast) — no
   per-leaf host stacking, no dict lookups.
 * ``scatter(ids, flat_global)`` writes one global row into the merged
   clients' slots via ``buf.at[ids].set(...)`` under a jit that DONATES
-  the buffer (donation is applied on accelerator backends; XLA CPU
+  the buffers (donation is applied on accelerator backends; XLA CPU
   does not implement donation, so it is skipped there to avoid
   warnings), so the store updates in place instead of copying N*P
   floats per window.
@@ -24,22 +25,33 @@ once at construction.
   the implicit row 0, zero-coefficient rows masked to exact no-ops —
   the straggler-mask convention, which also makes padded rows free) +
   flatten of the new global row + scatter, ONE jitted buffer-donating
-  program per padded cohort-size bucket.
+  program per padded cohort-size bucket.  ``use_kernel=True``
+  dispatches the merge through the folded Pallas fedagg kernel
+  (``fedagg_fold_pytree`` — interpret-mode on CPU, compiled on TPU),
+  the SAME program the dict-of-pytrees reference's
+  ``staleness_weighted_merge(use_kernel=True)`` runs, so kernel-path
+  histories stay bit-identical between the two snapshot paths.
 
-Donation contract: the store owns its buffer.  Callers must NOT hold
-references into ``store.buffer`` across ``scatter``/``merge_scatter``
-calls — on donating backends the old buffer is invalidated in place.
-``gather``/``gather_one`` return fresh arrays and are always safe.
+Donation contract: the store owns its buffers.  Callers must NOT hold
+references into ``store.buffer``/``store.int_buffer`` across
+``scatter``/``merge_scatter`` calls — on donating backends the old
+buffer is invalidated in place.  ``gather``/``gather_one`` return
+fresh arrays and are always safe.
 
 Sharding: pass a 1-D client mesh to shard the row axis across devices
 (rows padded to a mesh multiple via ``ClientShardingPlan`` — the extra
 rows are never addressed).  Gather/merge/scatter then run as GSPMD
-programs over the row-sharded buffer, composing with the sharded
+programs over the row-sharded buffers, composing with the sharded
 engine's cohort padding.
 
-Dtype note: rows are f32; f32/bf16/f16 leaves round-trip exactly
-(every bf16/f16 value is exactly representable in f32).  Integer /
-f64 leaves are rejected at construction.
+Dtype note (segment layout): f32/bf16/f16 leaves live in the f32 row
+segment (every bf16/f16 value is exactly representable in f32 — exact
+round-trip).  bool and integer leaves of <= 32 bits live in the int32
+sidecar segment: bool/int8/int16/int32/uint8/uint16 values embed
+exactly in int32 (plain ``astype`` both ways); uint32 round-trips via
+``lax.bitcast_convert_type`` (bit pattern preserved).  Leaves the
+store cannot carry exactly — 64-bit ints, f64, complex — are rejected
+at construction with ``TypeError``.
 """
 
 from __future__ import annotations
@@ -53,55 +65,122 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import _merge_folded_jnp
-from repro.kernels.ops import flatten_tree, tree_spec, unflatten_tree
+from repro.kernels.ops import fedagg_fold_pytree, on_cpu, tree_spec
 
-_OK_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+_FLOAT_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _leaf_kind(dtype) -> str:
+    """Segment + conversion rule of one leaf dtype: "f" (f32 segment),
+    "i" (int32 sidecar, value-exact astype), "u32" (int32 sidecar,
+    bitcast).  Raises TypeError for dtypes with no exact carrier."""
+    d = jnp.dtype(dtype)
+    if d in [jnp.dtype(x) for x in _FLOAT_DTYPES]:
+        return "f"
+    if d == jnp.dtype(jnp.uint32):
+        return "u32"
+    if (np.issubdtype(d, np.integer) or d == np.dtype(bool)) \
+            and d.itemsize <= 4:
+        return "i"
+    raise TypeError(
+        f"ClientStateStore rows are f32 + int32 segments: leaf dtype "
+        f"{dtype} does not round-trip exactly (float leaves up to f32 "
+        "and bool/int leaves up to 32 bits only)")
+
+
+def _segment_entries(spec):
+    """tree_spec entries -> per-leaf (kind, segment offset, size, shape,
+    dtype) with float and sidecar offsets accumulated independently.
+    Returns (entries, float width Pf, sidecar width Pi)."""
+    entries, f_off, i_off = [], 0, 0
+    for _, size, shape, dtype in spec:
+        kind = _leaf_kind(dtype)
+        if kind == "f":
+            entries.append((kind, f_off, size, shape, dtype))
+            f_off += size
+        else:
+            entries.append((kind, i_off, size, shape, dtype))
+            i_off += size
+    return tuple(entries), f_off, i_off
+
+
+def _to_rows(tree, entries):
+    """Model pytree -> ((Pf,) f32 row, (Pi,) int32 row); either row may
+    be zero-width."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    f_parts, i_parts = [], []
+    for l, (kind, _, _, _, _) in zip(leaves, entries):
+        x = jnp.asarray(l)
+        if kind == "f":
+            f_parts.append(x.reshape(-1).astype(jnp.float32))
+        elif kind == "i":
+            i_parts.append(x.reshape(-1).astype(jnp.int32))
+        else:
+            i_parts.append(
+                jax.lax.bitcast_convert_type(x, jnp.int32).reshape(-1))
+    frow = (jnp.concatenate(f_parts) if f_parts
+            else jnp.zeros((0,), jnp.float32))
+    irow = (jnp.concatenate(i_parts) if i_parts
+            else jnp.zeros((0,), jnp.int32))
+    return frow, irow
+
+
+def _leaf_from(seg, off, size, lead, kind, shape, dtype):
+    x = seg[..., off:off + size].reshape(lead + shape)
+    if kind == "u32":
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    return x.astype(dtype)
+
+
+def _from_rows(frow, irow, treedef, entries):
+    """((Pf,), (Pi,)) rows -> model pytree (exact per-leaf dtypes)."""
+    outs = [_leaf_from(frow if kind == "f" else irow, off, size, (),
+                       kind, shape, dtype)
+            for kind, off, size, shape, dtype in entries]
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+def _from_stacked_rows(frows, irows, treedef, entries):
+    """((K, Pf), (K, Pi)) row blocks -> stacked pytree, leaves (K, ...)."""
+    k = frows.shape[0]
+    outs = [_leaf_from(frows if kind == "f" else irows, off, size, (k,),
+                       kind, shape, dtype)
+            for kind, off, size, shape, dtype in entries]
+    return jax.tree_util.tree_unflatten(treedef, outs)
 
 
 @functools.lru_cache(maxsize=None)
-def _programs(treedef, spec, donate: bool):
-    """Jitted store programs, cached per (tree structure, donation
-    mode) so every store over the same model family shares compiled
-    code — a fresh store per run costs zero recompiles."""
+def _programs(treedef, entries, donate: bool):
+    """Jitted store programs, cached per (tree structure, segment
+    layout, donation mode) so every store over the same model family
+    shares compiled code — a fresh store per run costs zero recompiles."""
 
     def flatten_impl(tree):
-        return flatten_tree(tree)[0]
+        return _to_rows(tree, entries)
 
-    def unflatten_impl(flat):
-        return unflatten_tree(flat, treedef, spec)
+    def unflatten_impl(frow, irow):
+        return _from_rows(frow, irow, treedef, entries)
 
-    def unflatten_stacked_impl(rows):
-        k = rows.shape[0]
-        outs = [rows[:, off:off + size].reshape((k,) + shape)
-                .astype(dtype) for off, size, shape, dtype in spec]
-        return jax.tree_util.tree_unflatten(treedef, outs)
+    def gather_impl(fbuf, ibuf, ids):
+        return _from_stacked_rows(fbuf[ids], ibuf[ids], treedef, entries)
 
-    def gather_impl(buf, ids):
-        return unflatten_stacked_impl(buf[ids])
+    def gather_one_impl(fbuf, ibuf, i):
+        return _from_rows(fbuf[i], ibuf[i], treedef, entries)
 
-    def gather_one_impl(buf, i):
-        return unflatten_impl(buf[i])
+    def scatter_impl(fbuf, ibuf, ids, frow, irow):
+        return fbuf.at[ids].set(frow), ibuf.at[ids].set(irow)
 
-    def scatter_impl(buf, ids, row):
-        return buf.at[ids].set(row)
-
-    def scatter_params_impl(buf, ids, params):
-        row = flatten_impl(params)
-        return buf.at[ids].set(row), row
-
-    def merge_scatter_impl(buf, ids, stacked, coef, params):
-        # the exact folded-merge program of the dict-of-pytrees path
-        # (staleness_weighted_merge), fused with the flatten of the
-        # new global row and the snapshot scatter — padded rows carry
-        # coef 0 and are masked to exact no-ops.
-        new_params = _merge_folded_jnp(params, stacked, coef)
-        new_g = flatten_impl(new_params)
-        return buf.at[ids].set(new_g), new_g, new_params
+    def scatter_params_impl(fbuf, ibuf, ids, params):
+        frow, irow = flatten_impl(params)
+        return (fbuf.at[ids].set(frow), ibuf.at[ids].set(irow),
+                frow, irow)
 
     def init_impl(params, rows):
-        return jnp.tile(flatten_impl(params)[None], (rows, 1))
+        frow, irow = flatten_impl(params)
+        return (jnp.tile(frow[None], (rows, 1)),
+                jnp.tile(irow[None], (rows, 1)))
 
-    dk = dict(donate_argnums=(0,)) if donate else {}
+    dk = dict(donate_argnums=(0, 1)) if donate else {}
     return SimpleNamespace(
         flatten=jax.jit(flatten_impl),
         unflatten=jax.jit(unflatten_impl),
@@ -109,26 +188,41 @@ def _programs(treedef, spec, donate: bool):
         gather_one=jax.jit(gather_one_impl),
         scatter=jax.jit(scatter_impl, **dk),
         scatter_params=jax.jit(scatter_params_impl, **dk),
-        merge_scatter=jax.jit(merge_scatter_impl, **dk),
         init=jax.jit(init_impl, static_argnums=(1,)),
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _merge_programs(treedef, entries, donate: bool):
+    """The fused jnp merge+scatter program, cached separately from the
+    base store programs."""
+
+    def merge_scatter_impl(fbuf, ibuf, ids, stacked, coef, params):
+        # the exact folded-merge program of the dict-of-pytrees path
+        # (staleness_weighted_merge), fused with the flatten of the new
+        # global row and the snapshot scatter — padded rows carry coef
+        # 0 and are masked to exact no-ops.
+        new_params = _merge_folded_jnp(params, stacked, coef)
+        frow, irow = _to_rows(new_params, entries)
+        return (fbuf.at[ids].set(frow), ibuf.at[ids].set(irow),
+                frow, irow, new_params)
+
+    dk = dict(donate_argnums=(0, 1)) if donate else {}
+    return jax.jit(merge_scatter_impl, **dk)
+
+
 class ClientStateStore:
-    """All N client model snapshots as one device-resident (N, P) f32
-    buffer.  One instance per run; it owns the buffer (see the
-    donation contract in the module docstring)."""
+    """All N client model snapshots as one device-resident (N, Pf) f32
+    buffer plus an optional (N, Pi) int32 sidecar for non-float leaves.
+    One instance per run; it owns the buffers (see the donation
+    contract in the module docstring)."""
 
     def __init__(self, template_params, n_clients: int, *, mesh=None):
         if n_clients < 1:
             raise ValueError(f"need at least one client, got {n_clients}")
-        treedef, spec, self.p = tree_spec(template_params)
+        treedef, spec, _ = tree_spec(template_params)
         self.treedef, self.spec = treedef, spec
-        for _, _, shape, dtype in spec:
-            if jnp.dtype(dtype) not in [jnp.dtype(d) for d in _OK_DTYPES]:
-                raise TypeError(
-                    f"ClientStateStore rows are f32: leaf dtype {dtype} "
-                    "does not round-trip exactly (float leaves only)")
+        self.entries, self.p, self.pi = _segment_entries(spec)
         self.n = int(n_clients)
         self.mesh = mesh if (mesh is not None and int(mesh.size) > 1) \
             else None
@@ -141,34 +235,58 @@ class ClientStateStore:
         # XLA CPU does not implement buffer donation — donating there
         # only emits warnings.  Donate on real accelerator backends.
         self._donate = jax.default_backend() != "cpu"
-        self._fns = _programs(treedef, tuple(tuple(s) for s in spec),
-                              self._donate)
-        buf = self._fns.init(template_params, self.rows)
+        self._fns = _programs(treedef, self.entries, self._donate)
+        fbuf, ibuf = self._fns.init(template_params, self.rows)
         if self.mesh is not None:
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
-            buf = jax.device_put(
-                buf, NamedSharding(self.mesh, P(self.mesh.axis_names[0])))
-        self.buf = buf
+            rows_sharded = NamedSharding(self.mesh,
+                                         P(self.mesh.axis_names[0]))
+            fbuf = jax.device_put(fbuf, rows_sharded)
+            ibuf = jax.device_put(ibuf, rows_sharded)
+        self.buf, self.ibuf = fbuf, ibuf
 
     @staticmethod
     def _ids(ids) -> jnp.ndarray:
         return jnp.asarray(np.asarray(ids, np.int32))
 
+    def _rows_of(self, flat):
+        """Public row value -> (frow, irow) pair.  Stores WITH a
+        sidecar exchange ``(frow, irow)`` tuples; all-float stores keep
+        the PR 4 plain-(P,) row convention."""
+        if self.pi:
+            frow, irow = flat
+            return frow, irow
+        return flat, jnp.zeros((0,), jnp.int32)
+
+    def _row_value(self, frow, irow):
+        return (frow, irow) if self.pi else frow
+
     # -- flat <-> pytree views ------------------------------------------
     @property
     def buffer(self):
-        """The (rows, P) f32 buffer.  Read-only by convention — do not
+        """The (rows, Pf) f32 buffer.  Read-only by convention — do not
         hold a reference across scatter/merge_scatter (donation)."""
         return self.buf
 
+    @property
+    def int_buffer(self):
+        """The (rows, Pi) int32 sidecar (zero-width when the template
+        has float leaves only).  Same donation contract as ``buffer``."""
+        return self.ibuf
+
     def flatten(self, params):
-        """Model pytree -> (P,) f32 row (one jitted concat)."""
-        return self._fns.flatten(params)
+        """Model pytree -> flat row (one jitted concat): a (Pf,) f32
+        array, or a ``(f32 row, int32 row)`` pair when the template has
+        non-float leaves."""
+        frow, irow = self._fns.flatten(params)
+        return self._row_value(frow, irow)
 
     def unflatten(self, flat):
-        """(P,) row -> model pytree with per-leaf shapes/dtypes."""
-        return self._fns.unflatten(flat)
+        """Flat row (``flatten``'s convention) -> model pytree with
+        per-leaf shapes/dtypes."""
+        frow, irow = self._rows_of(flat)
+        return self._fns.unflatten(frow, irow)
 
     # -- gather / scatter -----------------------------------------------
     def gather(self, ids: Sequence[int]):
@@ -178,29 +296,31 @@ class ClientStateStore:
         — the engine's pow2/mesh convention — to bound retraces).
         Duplicate ids are fine (padded slots repeat the last client).
         """
-        return self._fns.gather(self.buf, self._ids(ids))
+        return self._fns.gather(self.buf, self.ibuf, self._ids(ids))
 
     def gather_one(self, client_id: int):
         """-> one client's snapshot as a model pytree."""
-        return self._fns.gather_one(self.buf, int(client_id))
+        return self._fns.gather_one(self.buf, self.ibuf, int(client_id))
 
     def scatter(self, ids: Sequence[int], flat_global):
-        """Write one (P,) global row into every ``ids`` slot in place
+        """Write one flat global row into every ``ids`` slot in place
         (donated).  Duplicate ids write the same row — harmless."""
-        self.buf = self._fns.scatter(self.buf, self._ids(ids),
-                                     flat_global)
+        frow, irow = self._rows_of(flat_global)
+        self.buf, self.ibuf = self._fns.scatter(
+            self.buf, self.ibuf, self._ids(ids), frow, irow)
 
     def scatter_params(self, ids: Sequence[int], params):
         """Flatten ``params`` and scatter it into ``ids`` as ONE
-        program; returns the (P,) row for callers tracking the current
+        program; returns the flat row for callers tracking the current
         global row."""
-        self.buf, row = self._fns.scatter_params(self.buf,
-                                                  self._ids(ids), params)
-        return row
+        self.buf, self.ibuf, frow, irow = self._fns.scatter_params(
+            self.buf, self.ibuf, self._ids(ids), params)
+        return self._row_value(frow, irow)
 
     # -- fused merge + scatter (the async round-step tail) --------------
     def merge_scatter(self, ids: Sequence[int], stacked_updates, coef,
-                      params):
+                      params, *, use_kernel: bool = False,
+                      interpret=None):
         """Fold one drained window into the global model and re-snapshot
         the merged clients, as ONE donated program.
 
@@ -209,9 +329,27 @@ class ClientStateStore:
         coefficients (``staleness_merge_coefficients`` order: global
         row 0 first) — zero entries (masked stragglers / padded rows)
         contribute exactly nothing.  ``params``: the current global
-        model pytree.  Returns ``(new_params, new_global_flat)``.
+        model pytree.  ``use_kernel=True`` dispatches the merge through
+        the folded Pallas fedagg kernel (interpret-mode on CPU,
+        compiled on TPU) — the same ``fedagg_fold_pytree`` program the
+        dict path's ``staleness_weighted_merge(use_kernel=True)`` runs.
+        Returns ``(new_params, new_global_flat)``.
         """
         coef = jnp.asarray(np.asarray(coef, np.float32))
-        self.buf, new_g, new_params = self._fns.merge_scatter(
-            self.buf, self._ids(ids), stacked_updates, coef, params)
-        return new_params, new_g
+        if use_kernel:
+            # dispatch the SAME standalone jitted kernel program the
+            # dict reference runs, then scatter through the fused
+            # flatten+scatter program.  Tracing the kernel INSIDE the
+            # donated scatter program would let XLA re-fuse the
+            # reduction (FMA contraction) and drift a ulp from the
+            # reference — two dispatches buy bit-identical histories.
+            interp = on_cpu() if interpret is None else bool(interpret)
+            new_params = fedagg_fold_pytree(params, stacked_updates,
+                                            coef, interpret=interp)
+            row = self.scatter_params(ids, new_params)
+            return new_params, row
+        fns = _merge_programs(self.treedef, self.entries, self._donate)
+        self.buf, self.ibuf, frow, irow, new_params = fns(
+            self.buf, self.ibuf, self._ids(ids), stacked_updates, coef,
+            params)
+        return new_params, self._row_value(frow, irow)

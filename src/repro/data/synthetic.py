@@ -11,9 +11,20 @@ claims (FedDCT vs baselines) are preserved (DESIGN.md §2).
 
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
+
+
+def _name_salt(name: str) -> int:
+    """Stable per-dataset seed offset.  Python's builtin ``hash(str)``
+    is salted per process (PYTHONHASHSEED), which made every new
+    process generate DIFFERENT "mnist" pixels for the same seed — the
+    source of the cross-process run-to-run nondeterminism in
+    ``fl_train.py``.  crc32 is a pure function of the bytes, so two
+    processes (and two machines) now agree."""
+    return zlib.crc32(name.encode("utf-8")) % (2 ** 16)
 
 
 _SPECS = {
@@ -47,7 +58,7 @@ def make_image_dataset(name: str, seed: int = 0, scale: float = 1.0
     """Returns {x_train, y_train, x_test, y_test}.  ``scale`` shrinks the
     dataset cardinality for fast CI runs (1.0 = paper-sized)."""
     spec = _SPECS[name]
-    rng = np.random.default_rng(seed + hash(name) % (2 ** 16))
+    rng = np.random.default_rng(seed + _name_salt(name))
     hw, ncls = spec["hw"], spec["n_classes"]
     n_train = int(spec["n_train"] * scale)
     n_test = int(spec["n_test"] * scale)

@@ -8,6 +8,12 @@ one device.  Here each shard reduces only its own rows —
 average.  That is the entire cross-device traffic of a round: one (P,)
 all-reduce plus one scalar.
 
+``use_kernel=True`` dispatches each shard's partial sum through the
+Pallas ``fedagg_partial`` kernel instead of the jnp reduction — the
+per-shard fedagg dispatch the ROADMAP names (interpret-mode on CPU,
+compiled on TPU); the psum combine and the normalization are
+unchanged, so the masking semantics are identical.
+
 Numerics: identical masking semantics to the reference (rows with
 ``eff_c = w_c * alpha_c <= 0`` contribute exactly nothing; an
 all-masked cohort yields zeros — or ``fallback`` when given), equal up
@@ -32,16 +38,27 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.aggregation import staleness_merge_coefficients
 from repro.distributed.plan import ClientShardingPlan
-from repro.kernels.ops import flatten_updates, unflatten_result
+from repro.kernels.fedagg import fedagg_partial
+from repro.kernels.ops import flatten_updates, on_cpu, unflatten_result
 
-# mesh -> jitted shard_map reduction (meshes hash by device assignment,
-# so one compiled program per distinct client mesh)
-_AGG_CACHE: Dict[object, object] = {}
-_MERGE_CACHE: Dict[object, object] = {}
+# (mesh, kernel dispatch) -> jitted shard_map reduction (meshes hash by
+# device assignment, so one compiled program per distinct client mesh
+# and dispatch mode)
+_AGG_CACHE: Dict[tuple, object] = {}
+_MERGE_CACHE: Dict[tuple, object] = {}
 
 
-def _agg_fn(mesh):
-    fn = _AGG_CACHE.get(mesh)
+def _resolve_kernel(use_kernel, interpret):
+    """Normalize the dispatch key: the jnp path ignores ``interpret``;
+    the kernel path defaults it to interpret-mode on CPU."""
+    if not use_kernel:
+        return False, None
+    return True, (on_cpu() if interpret is None else bool(interpret))
+
+
+def _agg_fn(mesh, use_kernel: bool, interpret):
+    key = (mesh, use_kernel, interpret)
+    fn = _AGG_CACHE.get(key)
     if fn is None:
         axis = mesh.axis_names[0]
 
@@ -52,9 +69,13 @@ def _agg_fn(mesh):
             # fused straggler/padding mask: a row with eff <= 0 is
             # zeroed BEFORE the reduction, so nonfinite garbage in
             # masked rows can never poison the average (the fedagg
-            # kernel convention).
-            masked = jnp.where((eff > 0.0)[:, None], u, 0.0)
-            num = jax.lax.psum(eff @ masked, axis)      # (P,)
+            # kernel convention — the kernel fuses the same mask).
+            if use_kernel:
+                local = fedagg_partial(u, eff, interpret=interpret)
+            else:
+                masked = jnp.where((eff > 0.0)[:, None], u, 0.0)
+                local = eff @ masked
+            num = jax.lax.psum(local, axis)             # (P,)
             den = jax.lax.psum(eff.sum(), axis)         # scalar
             return num / jnp.maximum(den, 1e-30), den
 
@@ -62,12 +83,13 @@ def _agg_fn(mesh):
             partial_reduce, mesh=mesh,
             in_specs=(P(axis), P(axis), P(axis)), out_specs=(P(), P()),
             check_rep=False))
-        _AGG_CACHE[mesh] = fn
+        _AGG_CACHE[key] = fn
     return fn
 
 
 def sharded_aggregate(mesh, stacked, weights, *, alphas=None,
-                      fallback=None):
+                      fallback=None, use_kernel: bool = False,
+                      interpret=None):
     """Client-sharded ``weighted_average_stacked``.
 
     ``stacked`` is a pytree whose leaves carry a leading client axis
@@ -75,7 +97,8 @@ def sharded_aggregate(mesh, stacked, weights, *, alphas=None,
     into per-row effective weights.  The buffer is flattened once into
     (N, P) f32 (cached unflatten spec — the fedagg pytree convention),
     zero-padded to a multiple of the mesh size with zero effective
-    weight (exact no-op rows), reduced per shard, and combined by one
+    weight (exact no-op rows), reduced per shard — through the Pallas
+    ``fedagg_partial`` kernel when ``use_kernel`` — and combined by one
     psum.  Returns the aggregated pytree with per-leaf shapes/dtypes
     restored.
 
@@ -92,8 +115,10 @@ def sharded_aggregate(mesh, stacked, weights, *, alphas=None,
         raise ValueError(
             f"weights/alphas length {w.shape[0]}/{a.shape[0]} != rows {n}")
     plan = ClientShardingPlan.for_cohort(n, mesh)
-    flat, den = _agg_fn(mesh)(plan.pad_stacked(buf, mode="zero"),
-                              plan.pad_weights(w), plan.pad_weights(a))
+    use_kernel, interpret = _resolve_kernel(use_kernel, interpret)
+    flat, den = _agg_fn(mesh, use_kernel, interpret)(
+        plan.pad_stacked(buf, mode="zero"),
+        plan.pad_weights(w), plan.pad_weights(a))
     out = unflatten_result(flat, treedef, spec)
     if fallback is None:
         return out
@@ -102,8 +127,9 @@ def sharded_aggregate(mesh, stacked, weights, *, alphas=None,
         out, fallback)
 
 
-def _merge_fn(mesh):
-    fn = _MERGE_CACHE.get(mesh)
+def _merge_fn(mesh, use_kernel: bool, interpret):
+    key = (mesh, use_kernel, interpret)
+    fn = _MERGE_CACHE.get(key)
     if fn is None:
         axis = mesh.axis_names[0]
 
@@ -111,14 +137,18 @@ def _merge_fn(mesh):
             # u (rows/D, P) f32, c (rows/D,) this shard's (already
             # normalized) merge coefficients; zero rows are padding or
             # masked stragglers — exact no-ops.
-            masked = jnp.where((c > 0.0)[:, None], u, 0.0)
-            return jax.lax.psum(c @ masked, axis)       # (P,)
+            if use_kernel:
+                local = fedagg_partial(u, c, interpret=interpret)
+            else:
+                masked = jnp.where((c > 0.0)[:, None], u, 0.0)
+                local = c @ masked
+            return jax.lax.psum(local, axis)            # (P,)
 
         fn = jax.jit(shard_map(
             partial_merge, mesh=mesh,
             in_specs=(P(axis), P(axis)), out_specs=P(),
             check_rep=False))
-        _MERGE_CACHE[mesh] = fn
+        _MERGE_CACHE[key] = fn
     return fn
 
 
@@ -133,13 +163,16 @@ def _fold_global(flat_sum, global_params, c0):
     return g_term + flat_sum
 
 
-def sharded_staleness_merge(mesh, global_params, stacked, alphas):
+def sharded_staleness_merge(mesh, global_params, stacked, alphas, *,
+                            use_kernel: bool = False, interpret=None):
     """Client-sharded ``staleness_weighted_merge``: the async window
     merge as one sharded reduction over the client rows, the global
     model riding as an IMPLICIT row 0 — its telescoped coefficient
     multiplies the flattened global row directly instead of
     concatenating a (K+1, ...) copy through the mesh.  Zero-alpha rows
-    (masked stragglers) contribute exactly nothing."""
+    (masked stragglers) contribute exactly nothing.  ``use_kernel``
+    dispatches each shard's partial sum through the Pallas
+    ``fedagg_partial`` kernel."""
     coef = staleness_merge_coefficients(alphas)
     # normalize host-side (the coefficients are host scalars already):
     # entries sum to 1 up to fp, mirroring the reference's in-program
@@ -149,8 +182,9 @@ def sharded_staleness_merge(mesh, global_params, stacked, alphas):
     buf, treedef, spec = flatten_updates(stacked)
     n = buf.shape[0]
     plan = ClientShardingPlan.for_cohort(n, mesh)
-    flat_sum = _merge_fn(mesh)(plan.pad_stacked(buf, mode="zero"),
-                               plan.pad_weights(c[1:]))
+    use_kernel, interpret = _resolve_kernel(use_kernel, interpret)
+    flat_sum = _merge_fn(mesh, use_kernel, interpret)(
+        plan.pad_stacked(buf, mode="zero"), plan.pad_weights(c[1:]))
     flat = _fold_global(flat_sum, global_params, jnp.float32(c[0]))
     merged = unflatten_result(flat, treedef, spec)
     # unflatten_result restores the STACKED leaves' dtypes; re-cast to

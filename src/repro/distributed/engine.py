@@ -16,9 +16,11 @@ which returns the shard_map-wrapped runner.  Trainers without the hook
 inherited single-device semantics, so every scheduler keeps working
 unmodified.
 
-Pallas kernel aggregation (``use_kernel_agg``) is a single-device code
-path; the sharded engine routes all merges through the psum reduction
-instead (per-shard kernel dispatch is the on-TPU follow-up).
+Pallas kernel aggregation (``use_kernel_agg``) dispatches each shard's
+partial sum through the ``fedagg_partial`` kernel inside the psum
+reduction (``repro.distributed.aggregate`` — interpret-mode on CPU,
+compiled on TPU); the combine and normalization are unchanged, so the
+flag changes how a shard reduces its own rows, not the semantics.
 
 Single-device note: ``make_engine(..., mesh=<1-device mesh>)``
 deliberately returns the plain ``BatchedClientEngine`` — the
@@ -29,7 +31,6 @@ by construction rather than by tolerance.
 from __future__ import annotations
 
 import inspect
-import warnings
 from typing import Callable, Dict, Optional
 
 import jax
@@ -94,11 +95,6 @@ class ShardedClientEngine(BatchedClientEngine):
 
     def __init__(self, trainer, mesh, *, interpret: Optional[bool] = None,
                  pad_cohorts: bool = True, **kw):
-        if kw.pop("use_kernel_agg", False):
-            warnings.warn(
-                "ShardedClientEngine ignores use_kernel_agg: merges run "
-                "through the sharded psum reduction (per-shard Pallas "
-                "fedagg dispatch is the on-TPU follow-up)", stacklevel=3)
         super().__init__(trainer, interpret=interpret,
                          pad_cohorts=pad_cohorts, **kw)
         if len(mesh.axis_names) != 1:
@@ -154,14 +150,20 @@ class ShardedClientEngine(BatchedClientEngine):
 
     # -- aggregation: per-shard partial sums + one psum -----------------
     def aggregate(self, stacked, weights):
-        return sharded_aggregate(self.mesh, stacked, weights)
+        return sharded_aggregate(self.mesh, stacked, weights,
+                                 use_kernel=self.use_kernel_agg,
+                                 interpret=self.interpret)
 
     def aggregate_or_keep(self, params, stacked, weights):
         # the all-masked guard rides the psum'd denominator: a
         # device-side select, no host sync (mirrors the base engine's
         # lax.cond guard).
         return sharded_aggregate(self.mesh, stacked, weights,
-                                 fallback=params)
+                                 fallback=params,
+                                 use_kernel=self.use_kernel_agg,
+                                 interpret=self.interpret)
 
     def merge_staleness(self, params, stacked, alphas):
-        return sharded_staleness_merge(self.mesh, params, stacked, alphas)
+        return sharded_staleness_merge(self.mesh, params, stacked, alphas,
+                                       use_kernel=self.use_kernel_agg,
+                                       interpret=self.interpret)

@@ -3,6 +3,11 @@ from repro.kernels.ops import (
     ssm_scan_op,
     fedagg_op,
     fedagg_pytree,
+    fedagg_fold_op,
+    fedagg_fold_pytree,
+    fedagg_partial_op,
 )
 
-__all__ = ["gqa_flash_attention", "ssm_scan_op", "fedagg_op", "fedagg_pytree"]
+__all__ = ["gqa_flash_attention", "ssm_scan_op", "fedagg_op",
+           "fedagg_pytree", "fedagg_fold_op", "fedagg_fold_pytree",
+           "fedagg_partial_op"]

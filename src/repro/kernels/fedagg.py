@@ -14,6 +14,22 @@ coefficients): the effective row weight is ``w_c * alpha_c``, so a
 zero-alpha row (a fully-stale / masked client) is a straggler exactly
 like a zero-weight row.  ``alphas=None`` keeps the original FedAvg
 semantics (all ones).
+
+Two companions serve the async-runtime merge paths:
+
+* ``fedagg_fold`` — the folded-row-0 staleness window merge: client
+  rows (K, P) plus the current global row (P,) and the telescoped
+  coefficient vector (K+1,) with the global model as the IMPLICIT row
+  0, so no (K+1, P) concatenated copy is ever materialized.  The row
+  reduction is a masked multiply + sum (not a dot) so appending
+  zero-coefficient rows — the engine's padded cohort buckets — is a
+  bitwise no-op, which is what lets the store-backed fused window step
+  and the dict-of-pytrees reference produce bit-identical histories.
+* ``fedagg_partial`` — the UNNORMALIZED masked row-sum
+  ``sum_c c_c * u_c`` over one shard's rows: the per-shard term of the
+  client-sharded psum reductions (``repro.distributed.aggregate``),
+  same masking convention, normalization left to the caller's psum'd
+  denominator.
 """
 
 from __future__ import annotations
@@ -81,3 +97,111 @@ def fedagg(updates, weights, *, alphas=None, block_p: int = 16384,
     if alphas is None:
         alphas = jnp.ones_like(weights, dtype=jnp.float32)
     return _fedagg_call(updates, weights, alphas, block_p, interpret)
+
+
+def _fold_kernel(u_ref, g_ref, c_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # (K, bp) client rows
+    gt = g_ref[...].astype(jnp.float32)         # (bp,)  global row tile
+    c = c_ref[...].astype(jnp.float32)          # (K+1,) [global, rows]
+    c = jnp.where(c > 0.0, c, 0.0)
+    c = c / jnp.maximum(c.sum(), 1e-30)
+    c0, cr = c[0], c[1:]
+    # fused straggler/pad mask: zero-coefficient rows contribute exactly
+    # nothing even when their update row is inf/nan.
+    u = jnp.where((cr > 0.0)[:, None], u, 0.0)
+    g_term = jnp.where(c0 > 0.0, c0 * gt, 0.0)
+    # masked multiply + row-axis sum, NOT a dot: appending zero rows
+    # (padded cohort buckets) appends exact +0.0 terms to a sequential
+    # reduction, keeping padded and unpadded windows bitwise equal.
+    o_ref[...] = (g_term
+                  + jnp.sum(u * cr[:, None], axis=0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _fedagg_fold_call(updates, g, coef, block_p, interpret):
+    n, p = updates.shape
+    bp = min(block_p, p)
+    pad = (-p) % bp
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        g = jnp.pad(g, (0, pad))
+    np_ = updates.shape[1]
+
+    out = pl.pallas_call(
+        _fold_kernel,
+        grid=(np_ // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda i: (0, i)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((n + 1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), updates.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(updates, g, coef)
+    return out[:p] if pad else out
+
+
+def fedagg_fold(updates, g, coef, *, block_p: int = 16384,
+                interpret: bool = False):
+    """Folded staleness window merge: updates (K,P), global row g (P,),
+    coef (K+1,) -> merged row (P,).
+
+    ``coef`` is ``staleness_merge_coefficients(alphas)`` order: the
+    global model's telescoped coefficient first, then one entry per
+    client row.  Coefficients are masked at <= 0 and renormalized
+    in-kernel (the fedagg convention), so masked stragglers and padded
+    rows contribute exactly nothing; if every coefficient is zero the
+    result is all-zeros.
+    """
+    return _fedagg_fold_call(updates, g, jnp.asarray(coef, jnp.float32),
+                             block_p, interpret)
+
+
+def _partial_kernel(u_ref, c_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # (rows, bp)
+    c = c_ref[...].astype(jnp.float32)          # (rows,)
+    c = jnp.where(c > 0.0, c, 0.0)
+    u = jnp.where((c > 0.0)[:, None], u, 0.0)
+    o_ref[...] = jnp.sum(u * c[:, None], axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def _fedagg_partial_call(updates, coef, block_p, interpret):
+    n, p = updates.shape
+    bp = min(block_p, p)
+    pad = (-p) % bp
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    np_ = updates.shape[1]
+
+    out = pl.pallas_call(
+        _partial_kernel,
+        grid=(np_ // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), updates.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(updates, coef)
+    return out[:p] if pad else out
+
+
+def fedagg_partial(updates, coef, *, block_p: int = 16384,
+                   interpret: bool = False):
+    """UNNORMALIZED masked weighted row-sum ``sum_c c_c * u_c`` -> (P,).
+
+    The per-shard term of the client-sharded psum reductions: rows with
+    ``c_c <= 0`` are zeroed before the sum (straggler/padding mask),
+    normalization is the caller's job (divide by the psum'd coefficient
+    sum).  Runs per shard inside ``shard_map`` — interpret-mode on CPU,
+    compiled on TPU, like every fedagg dispatch.
+    """
+    return _fedagg_partial_call(updates, jnp.asarray(coef, jnp.float32),
+                                block_p, interpret)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.fedagg import fedagg
+from repro.kernels.fedagg import fedagg, fedagg_fold, fedagg_partial
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssm_scan import ssm_scan
 
@@ -131,21 +131,6 @@ def tree_spec(tree):
     return treedef, spec, total
 
 
-def flatten_tree(tree):
-    """Model pytree -> ((P,) f32 row, treedef, spec).  f32/bf16/f16
-    leaves round-trip exactly through the f32 row."""
-    treedef, spec, _ = tree_spec(tree)
-    leaves = jax.tree_util.tree_leaves(tree)
-    return (jnp.concatenate([jnp.asarray(l).reshape(-1).astype(jnp.float32)
-                             for l in leaves]), treedef, spec)
-
-
-# (P,) f32 row -> model pytree: the slicing is identical to the
-# stacked-result unflattener, only the spec's provenance differs
-# (tree_spec's full-shape entries vs flatten_updates' per-row entries)
-unflatten_tree = unflatten_result
-
-
 def fedagg_pytree(stacked_updates, weights, *, alphas=None, block_p=16384,
                   interpret=None):
     """Weighted-average a pytree whose leaves are stacked (N, ...).
@@ -161,3 +146,49 @@ def fedagg_pytree(stacked_updates, weights, *, alphas=None, block_p=16384,
     flat = fedagg(buf, weights, alphas=alphas, block_p=block_p,
                   interpret=interpret)
     return unflatten_result(flat, treedef, spec)
+
+
+def flatten_params_row(params):
+    """Model pytree -> (P,) f32 row in ``flatten_updates`` leaf order
+    (no leading client axis) — the global-row companion of the stacked
+    (N, P) buffer.  Kept jit-traceable (callers fuse it into their own
+    programs)."""
+    return jnp.concatenate(
+        [jnp.asarray(l).reshape(-1).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(params)])
+
+
+def fedagg_fold_op(updates, g, coef, *, block_p=16384, interpret=None):
+    interpret = on_cpu() if interpret is None else interpret
+    return fedagg_fold(updates, g, coef, block_p=block_p,
+                       interpret=interpret)
+
+
+def fedagg_partial_op(updates, coef, *, block_p=16384, interpret=None):
+    interpret = on_cpu() if interpret is None else interpret
+    return fedagg_partial(updates, coef, block_p=block_p,
+                          interpret=interpret)
+
+
+def fedagg_fold_pytree(global_params, stacked_updates, coef, *,
+                       block_p=16384, interpret=None):
+    """Folded staleness window merge over pytrees: ONE kernel pass on
+    the flattened (K, P) client-row buffer with the global model as the
+    IMPLICIT row 0 (its (P,) row rides in directly — no (K+1, ...)
+    concatenated copy).
+
+    This is the SHARED merge program of the async runtime's kernel
+    path: both the dict-of-pytrees reference and the store-backed fused
+    window step call it on identically-flattened buffers, which is what
+    makes their histories bit-identical.  ``coef`` is the (K+1,)
+    ``staleness_merge_coefficients`` vector (global first); padded /
+    masked rows carry coefficient 0 and contribute exactly nothing.
+    """
+    interpret = on_cpu() if interpret is None else interpret
+    buf, treedef, spec = flatten_updates(stacked_updates)
+    g_flat = flatten_params_row(global_params)
+    flat = fedagg_fold(buf, g_flat, coef, block_p=block_p,
+                       interpret=interpret)
+    out = unflatten_result(flat, treedef, spec)
+    return jax.tree_util.tree_map(
+        lambda g, m: m.astype(g.dtype), global_params, out)

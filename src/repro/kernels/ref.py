@@ -67,3 +67,22 @@ def fedagg_ref(updates, weights, alphas=None):
     w = jnp.where(w > 0.0, w, 0.0)
     w = w / jnp.maximum(w.sum(), 1e-30)
     return jnp.einsum("np,n->p", u, w).astype(updates.dtype)
+
+
+def fedagg_fold_ref(updates, g, coef):
+    """Oracle for ``fedagg_fold``: updates (K,P), g (P,), coef (K+1,)
+    with the global row folded in as the implicit row 0."""
+    c = coef.astype(jnp.float32)
+    c = jnp.where(c > 0.0, c, 0.0)
+    c = c / jnp.maximum(c.sum(), 1e-30)
+    u = jnp.where((c[1:] > 0.0)[:, None], updates.astype(jnp.float32), 0.0)
+    g_term = jnp.where(c[0] > 0.0, c[0] * g.astype(jnp.float32), 0.0)
+    return (g_term + jnp.sum(u * c[1:, None], axis=0)).astype(updates.dtype)
+
+
+def fedagg_partial_ref(updates, coef):
+    """Oracle for ``fedagg_partial``: unnormalized masked row-sum."""
+    c = coef.astype(jnp.float32)
+    c = jnp.where(c > 0.0, c, 0.0)
+    u = jnp.where((c > 0.0)[:, None], updates.astype(jnp.float32), 0.0)
+    return jnp.sum(u * c[:, None], axis=0).astype(updates.dtype)

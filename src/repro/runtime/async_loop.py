@@ -32,7 +32,6 @@ a later round, discounted by its staleness.
 
 from __future__ import annotations
 
-import warnings
 from typing import Dict, List
 
 import jax
@@ -50,48 +49,32 @@ from repro.runtime.events import ClientEvent, EventQueue
 
 
 def _resolve_store(params, n_clients: int, mesh, use_store,
-                   use_kernel_agg: bool, window_active: bool):
-    """-> ``ClientStateStore`` or ``None`` (the dict-of-pytrees path),
-    applying the store policy in one place:
+                   window_active: bool):
+    """-> ``(ClientStateStore or None, reason)`` applying the store
+    policy in one place.  ``None`` store means the dict-of-pytrees
+    path; ``reason`` is a machine-checkable tag recorded on the
+    ``RunHistory`` (``meta["store_reason"]``) so benchmarks and tests
+    can assert which path actually ran instead of sniffing warnings:
 
     * ``use_store=None`` (default) enables the store exactly when
       windows can batch — a pure ``window=0`` sequential loop has no
       stacking to amortize, so the dict path's free reference rebind
-      wins there;
-    * ``use_kernel_agg`` merges through the Pallas fedagg path, which
-      the store's fused window step does not dispatch yet (the on-TPU
-      follow-up) — warn and take the dict path so the flag keeps its
-      numerics;
-    * a params template the store cannot hold exactly (non-float
-      leaves) degrades to the dict path instead of failing the default
-      configuration.
-
-    Fallbacks warn only when the caller EXPLICITLY forced
-    ``use_store=True`` — auto-resolution picks the dict path silently
-    (it is exactly the pre-store behavior, nothing asked for is lost).
+      wins there (reason ``"window0-sequential"``);
+    * ``use_store=False`` keeps the dict reference path (reason
+      ``"forced-off"``);
+    * otherwise the store is constructed, full stop — the fused window
+      step dispatches the Pallas fedagg kernel when asked and the
+      store carries non-float leaves in its int32 sidecar segment, so
+      there is no configuration left to degrade on.  A template the
+      store genuinely cannot hold exactly (64-bit leaves) raises
+      ``TypeError`` loudly instead of silently changing paths.
     """
-    explicit = use_store is True
-    if use_store is None:
-        use_store = window_active
-    if not use_store:
-        return None
-    if use_kernel_agg:
-        if explicit:
-            warnings.warn(
-                "use_kernel_agg merges through the Pallas fedagg path, "
-                "which the store-backed fused window step does not "
-                "dispatch yet — falling back to the dict-of-pytrees "
-                "snapshot path", stacklevel=3)
-        return None
-    try:
-        return ClientStateStore(params, n_clients, mesh=mesh)
-    except TypeError as e:
-        if explicit:
-            warnings.warn(
-                f"ClientStateStore cannot hold this params pytree ({e}) "
-                "— falling back to the dict-of-pytrees snapshot path",
-                stacklevel=3)
-        return None
+    if use_store is False:
+        return None, "forced-off"
+    if use_store is None and not window_active:
+        return None, "window0-sequential"
+    reason = "forced-on" if use_store is True else "auto-windowed"
+    return ClientStateStore(params, n_clients, mesh=mesh), reason
 
 
 def _alphas(fl: FLConfig, stalenesses: List[int]) -> List[float]:
@@ -204,6 +187,10 @@ class AsyncRunner:
         # histories, slower server step); True = force (window=0
         # included).  Resolved by ``_resolve_store`` at run().
         self.use_store = use_store
+        # resolved snapshot-path tag ("auto-windowed" / "forced-on" /
+        # "forced-off" / "window0-sequential"), set by run() and also
+        # recorded on the RunHistory meta.
+        self.store_reason = None
         self.buffer = AggregationBuffer(window, window_secs)
         self.eval_every = max(int(eval_every), 1)
         self.verbose = verbose
@@ -217,9 +204,8 @@ class AsyncRunner:
         # true async: each client trains from the global model snapshot
         # taken when it STARTED (not finished) — staleness weights exist
         # to correct exactly that lag.
-        store = _resolve_store(
+        store, self.store_reason = _resolve_store(
             params, fl.n_clients, self.mesh, self.use_store,
-            self.use_kernel_agg,
             window_active=(self.buffer.window > 0
                            or self.buffer.window_secs > 0))
         snapshots: Dict[int, object] = {}
@@ -231,7 +217,10 @@ class AsyncRunner:
                   "alpha": fl.async_alpha, "a": fl.async_a,
                   "engine": self.engine, "window": self.buffer.window,
                   "window_secs": self.buffer.window_secs,
-                  "store": store is not None})
+                  "store": store is not None,
+                  "store_path": "store" if store is not None else "dict",
+                  "store_reason": self.store_reason,
+                  "kernel_agg": self.use_kernel_agg})
         first = net.delays(np.arange(fl.n_clients), 0)
         q = EventQueue([ClientEvent(float(t), c, 0, 0, cost=float(t))
                         for c, t in enumerate(first)])
@@ -309,15 +298,19 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     # snapshot-at-selection state: store rows (device-resident flat
     # buffer) by default — tier windows always batch — with the
     # dict-of-pytrees path as the A/B reference (use_store=False)
-    store = _resolve_store(params, fl.n_clients, mesh, use_store,
-                           use_kernel_agg, window_active=True)
+    store, store_reason = _resolve_store(params, fl.n_clients, mesh,
+                                         use_store, window_active=True)
     hist = RunHistory(method="feddct_async", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
                             "omega": fl.omega, "tau": fl.tau,
                             "n_tiers": fl.n_tiers, "engine": engine,
                             "alpha": fl.async_alpha, "a": fl.async_a,
-                            "store": store is not None})
+                            "store": store is not None,
+                            "store_path": ("store" if store is not None
+                                           else "dict"),
+                            "store_reason": store_reason,
+                            "kernel_agg": use_kernel_agg})
     clock = 0.0
 
     # initial kappa-round evaluation of every client (parallel), exactly

@@ -1,5 +1,9 @@
 """Data pipeline: synthetic sets, partitioners (seeded sweeps), batching."""
 
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
@@ -17,6 +21,43 @@ def test_image_dataset_shapes_and_determinism():
     np.testing.assert_array_equal(d1["x_train"], d2["x_train"])
     d3 = make_image_dataset("cifar10", seed=0, scale=0.01)
     assert d3["x_train"].shape == (500, 32, 32, 3)
+
+
+def _run_digest_subprocess(hashseed: str) -> str:
+    """Hash the synthetic dataset + partition in a FRESH interpreter
+    with an explicit PYTHONHASHSEED — the cross-process reproducibility
+    the in-process determinism test above cannot see."""
+    code = (
+        "import hashlib, numpy as np\n"
+        "from repro.data import make_image_dataset, "
+        "primary_class_partition\n"
+        "d = make_image_dataset('mnist', seed=0, scale=0.002)\n"
+        "parts = primary_class_partition(d['y_train'], 4, 0.7, seed=0)\n"
+        "h = hashlib.sha256()\n"
+        "for k in ('x_train', 'y_train', 'x_test', 'y_test'):\n"
+        "    h.update(np.ascontiguousarray(d[k]).tobytes())\n"
+        "for p in parts:\n"
+        "    h.update(np.ascontiguousarray(np.asarray(p)).tobytes())\n"
+        "print(h.hexdigest())\n")
+    env = dict(os.environ, PYTHONHASHSEED=hashseed,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    return out.stdout.strip()
+
+
+def test_image_dataset_identical_across_processes():
+    """Regression: the dataset seed salt used builtin ``hash(name)``,
+    which PYTHONHASHSEED randomizes per process — same flags produced
+    different pixels (and different final accuracy) in every new
+    ``fl_train.py`` process.  Two interpreters with different hash
+    seeds must now agree byte for byte."""
+    d1 = _run_digest_subprocess("1")
+    d2 = _run_digest_subprocess("2")
+    assert d1 == d2
 
 
 def test_classes_are_separable_by_prototype_distance():

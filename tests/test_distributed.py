@@ -253,6 +253,56 @@ def test_sharded_staleness_merge_matches_reference():
 
 
 # ---------------------------------------------------------------------------
+# per-shard Pallas fedagg dispatch (interpret mode inside shard_map)
+# ---------------------------------------------------------------------------
+
+def test_sharded_aggregate_kernel_dispatch_matches_jnp():
+    """use_kernel=True reduces each shard's rows through the
+    fedagg_partial Pallas kernel (interpret on CPU); the psum combine
+    and masking semantics are unchanged."""
+    mesh = make_client_mesh()
+    n = 9
+    tree = _stacked_tree(n, seed=11)
+    rng = np.random.default_rng(12)
+    w = rng.uniform(0.5, 2.0, n).astype(np.float32)
+    w[3] = 0.0                                 # masked straggler row
+    out_k = sharded_aggregate(mesh, tree, w, use_kernel=True)
+    out_j = sharded_aggregate(mesh, tree, w)
+    _assert_tree_close(out_k, out_j)
+    ref = weighted_average_stacked(tree, w)
+    _assert_tree_close(out_k, ref)
+
+
+def test_sharded_aggregate_kernel_all_masked_fallback():
+    mesh = make_client_mesh()
+    fallback = {"w": jnp.asarray([5.0, 6.0], jnp.float32)}
+    out = sharded_aggregate(mesh, {"w": jnp.full((4, 2), np.nan)},
+                            np.zeros(4), fallback=fallback,
+                            use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(fallback["w"]))
+
+
+def test_sharded_staleness_merge_kernel_dispatch_matches_reference():
+    """The sharded kernel-merge parity case: per-shard fedagg_partial
+    partial sums + one psum must match the single-device folded merge
+    within float tolerance (runs on whatever mesh exists — the
+    forced-8-host-device CI job included)."""
+    mesh = make_client_mesh()
+    n = 10
+    stacked = _stacked_tree(n, seed=13)
+    g = jax.tree_util.tree_map(lambda l: l[0] * 0.5, stacked)
+    alphas = (0.6 * (np.arange(n, dtype=np.float64) + 1.0) ** -0.5)
+    alphas[4] = 0.0                            # carried straggler: no-op row
+    out_k = sharded_staleness_merge(mesh, g, stacked, alphas,
+                                    use_kernel=True)
+    ref = staleness_weighted_merge(g, stacked, alphas)
+    _assert_tree_close(out_k, ref)
+    out_j = sharded_staleness_merge(mesh, g, stacked, alphas)
+    _assert_tree_close(out_k, out_j)
+
+
+# ---------------------------------------------------------------------------
 # shard_cohort_train mechanics (pure functions, no trainer)
 # ---------------------------------------------------------------------------
 
@@ -327,10 +377,20 @@ def test_make_engine_looped_plus_mesh_rejected_or_passthrough():
 
 
 @multi_device
-def test_sharded_engine_warns_on_discarded_kernel_agg():
-    with pytest.warns(UserWarning, match="use_kernel_agg"):
-        make_engine(_FakeLoopTrainer(), mesh=make_client_mesh(),
-                    use_kernel_agg=True)
+def test_sharded_engine_kernel_agg_dispatches_per_shard():
+    """The sharded engine no longer discards use_kernel_agg: merges run
+    the per-shard fedagg_partial dispatch inside the psum reduction and
+    match the plain kernel engine."""
+    eng = make_engine(_FakeLoopTrainer(), mesh=make_client_mesh(),
+                      use_kernel_agg=True)
+    assert isinstance(eng, ShardedClientEngine)
+    assert eng.use_kernel_agg
+    p = {"w": jnp.zeros(4, jnp.float32)}
+    out = eng.train_round(p, [1, 3], rnd_seed=0)
+    plain = make_engine(_FakeLoopTrainer(), use_kernel_agg=True)
+    ref = plain.train_round(p, [1, 3], rnd_seed=0)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(ref["w"]), rtol=1e-5)
 
 
 @multi_device
@@ -489,6 +549,24 @@ def test_fedasync_windowed_sharded_matches_single_device():
                       mesh=make_client_mesh())
     tr2, net2, fl2 = _setup(seed=1)
     hp = run_fedasync(tr2, net2, fl2, window_secs=20.0, eval_every=4)
+    assert hs.rounds == hp.rounds
+    assert hs.times == hp.times
+    assert hs.meta["mean_cohort"] == hp.meta["mean_cohort"]
+    np.testing.assert_allclose(hs.accuracy, hp.accuracy, atol=5e-3)
+
+
+@multi_device
+def test_fedasync_windowed_sharded_kernel_store_matches_single_device():
+    """Everything at once: client-mesh sharded training, the
+    row-sharded store, and the Pallas kernel merge dispatch — within
+    tolerance of the plain single-device kernel runtime."""
+    tr, net, fl = _setup(seed=1)
+    hs = run_fedasync(tr, net, fl, window_secs=20.0, eval_every=4,
+                      mesh=make_client_mesh(), use_kernel_agg=True)
+    assert hs.meta["store_path"] == "store"
+    tr2, net2, fl2 = _setup(seed=1)
+    hp = run_fedasync(tr2, net2, fl2, window_secs=20.0, eval_every=4,
+                      use_kernel_agg=True)
     assert hs.rounds == hp.rounds
     assert hs.times == hp.times
     assert hs.meta["mean_cohort"] == hp.meta["mean_cohort"]

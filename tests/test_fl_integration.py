@@ -1,6 +1,11 @@
 """End-to-end FL integration: real training, all four methods, paper-
 shaped claims in miniature (tiny datasets so CI stays fast)."""
 
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
@@ -26,6 +31,35 @@ def test_feddct_learns_on_cnn():
     tr, net, fl = _setup(rounds=15, scale=0.03)
     h = run_method("feddct", tr, net, fl, eval_every=5)
     assert h.accuracy[-1] > h.accuracy[0] + 0.05
+
+
+@pytest.mark.slow
+def test_fl_train_exactly_reproducible_across_processes(tmp_path):
+    """Regression for the cross-process nondeterminism observed at the
+    PR 4 seed state: same ``fl_train.py`` flags in two FRESH processes
+    (different PYTHONHASHSEED, the entropy source the bug rode on) must
+    write byte-identical RunHistory JSON.  In-process A/B was always
+    bitwise — only a new interpreter exposed the salted ``hash(name)``
+    in the dataset seed."""
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    outs = []
+    for hashseed in ("1", "2"):
+        out = str(tmp_path / f"hist_{hashseed}.json")
+        env = dict(os.environ, PYTHONHASHSEED=hashseed,
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.fl_train",
+             "--arch", "cnn-mnist", "--method", "fedbuff",
+             "--rounds", "2", "--clients", "4", "--tau", "2",
+             "--window", "2", "--seed", "0", "--out", out],
+            env=env, cwd=repo, capture_output=True, text=True,
+            timeout=900)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(out)
+    with open(outs[0]) as f0, open(outs[1]) as f1:
+        h0, h1 = json.load(f0), json.load(f1)
+    assert h0 == h1
 
 
 @pytest.mark.slow

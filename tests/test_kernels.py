@@ -5,9 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import fedagg_op, gqa_flash_attention, ssm_scan_op
+from repro.kernels import (fedagg_fold_op, fedagg_op, fedagg_partial_op,
+                           gqa_flash_attention, ssm_scan_op)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ref import fedagg_ref, flash_attention_ref, ssm_scan_ref
+from repro.kernels.ref import (fedagg_fold_ref, fedagg_partial_ref,
+                               fedagg_ref, flash_attention_ref,
+                               ssm_scan_ref)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -145,3 +148,70 @@ def test_fedagg_dtypes(dtype):
     ref = fedagg_ref(u, w)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fedagg_fold (implicit global row 0) and fedagg_partial (per-shard sum)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,p,bp", [(3, 100, 64), (8, 999, 256),
+                                    (1, 17, 64)])
+def test_fedagg_fold_shapes(k, p, bp):
+    ks = jax.random.split(KEY, 3)
+    u = jax.random.normal(ks[0], (k, p), jnp.float32)
+    g = jax.random.normal(ks[1], (p,), jnp.float32)
+    coef = jnp.abs(jax.random.normal(ks[2], (k + 1,))) + 0.05
+    out = fedagg_fold_op(u, g, coef, block_p=bp, interpret=True)
+    ref = fedagg_fold_ref(u, g, coef)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fedagg_fold_zero_coef_rows_masked_even_nonfinite():
+    u = jnp.asarray([[1.0, 2.0], [np.nan, np.inf]], jnp.float32)
+    g = jnp.asarray([4.0, 8.0], jnp.float32)
+    coef = jnp.asarray([0.5, 0.5, 0.0], jnp.float32)
+    out = fedagg_fold_op(u, g, coef, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [2.5, 5.0], rtol=1e-6)
+
+
+def test_fedagg_fold_padded_zero_rows_are_bitwise_noops():
+    """The store's fused window pads cohorts with zero-coefficient
+    rows; the kernel's masked multiply+sum must keep padded and
+    unpadded windows BITWISE equal (the store-vs-dict history gate)."""
+    ks = jax.random.split(KEY, 3)
+    u = jax.random.normal(ks[0], (5, 403), jnp.float32)
+    g = jax.random.normal(ks[1], (403,), jnp.float32)
+    coef = jnp.abs(jax.random.normal(ks[2], (6,))) + 0.05
+    out = fedagg_fold_op(u, g, coef, block_p=128, interpret=True)
+    u_pad = jnp.concatenate([u, jnp.full((3, 403), np.nan, jnp.float32)])
+    coef_pad = jnp.concatenate([coef, jnp.zeros(3, jnp.float32)])
+    out_pad = fedagg_fold_op(u_pad, g, coef_pad, block_p=128,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_pad))
+
+
+def test_fedagg_fold_all_zero_coef_gives_zeros():
+    u = jnp.ones((3, 5), jnp.float32)
+    g = jnp.ones((5,), jnp.float32)
+    out = fedagg_fold_op(u, g, jnp.zeros(4), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=0)
+
+
+@pytest.mark.parametrize("n,p,bp", [(4, 100, 64), (7, 513, 128)])
+def test_fedagg_partial_shapes(n, p, bp):
+    ks = jax.random.split(KEY, 2)
+    u = jax.random.normal(ks[0], (n, p), jnp.float32)
+    c = jnp.abs(jax.random.normal(ks[1], (n,)))
+    out = fedagg_partial_op(u, c, block_p=bp, interpret=True)
+    ref = fedagg_partial_ref(u, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fedagg_partial_is_unnormalized_and_masked():
+    u = jnp.asarray([[2.0, 4.0], [np.nan, np.nan], [1.0, 1.0]],
+                    jnp.float32)
+    c = jnp.asarray([0.5, 0.0, 2.0], jnp.float32)
+    out = fedagg_partial_op(u, c, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), [3.0, 4.0], rtol=1e-6)

@@ -41,8 +41,14 @@ def _tree_equal(a, b):
     assert len(la) == len(lb)
     for x, y in zip(la, lb):
         assert x.dtype == y.dtype and x.shape == y.shape
-        np.testing.assert_array_equal(np.asarray(x, np.float32),
-                                      np.asarray(y, np.float32))
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            # f32 view: bf16/f16 compare exactly through it
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+        else:
+            # int/bool leaves compare exactly in their own dtype (an
+            # f32 view would hide precision loss above 2^24)
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 def _stack(trees):
@@ -71,11 +77,64 @@ def test_store_initializes_every_row_to_template():
         _tree_equal(jax.tree_util.tree_map(lambda l: l[i], stacked), t)
 
 
-def test_store_rejects_non_float_leaves():
+def test_store_rejects_leaves_without_exact_carrier():
+    """complex leaves have no exact f32/int32 carrier; zero clients is
+    a config error.  (int/bool leaves are FINE — the sidecar segment.)"""
     with pytest.raises(TypeError):
-        ClientStateStore({"i": jnp.arange(3)}, 2)
+        ClientStateStore({"c": jnp.asarray([1 + 2j], jnp.complex64)}, 2)
     with pytest.raises(ValueError):
         ClientStateStore(_template(), 0)
+
+
+def _int_template(seed=0):
+    """Mixed float + non-float pytree: every non-float leaf dtype the
+    int32 sidecar must carry exactly."""
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(3, 2)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+        "step": jnp.int32(int(rng.integers(0, 1000))),
+        "mask": jnp.asarray(rng.integers(0, 2, size=(5,)).astype(bool)),
+        "i8": jnp.asarray(rng.integers(-128, 128, size=(3,)), jnp.int8),
+        "u16": jnp.asarray(rng.integers(0, 2 ** 16, size=(2,)),
+                           jnp.uint16),
+        "u32": jnp.asarray([2 ** 31 + 5, 3], jnp.uint32),  # > int32 max
+    }
+
+
+def test_store_int_bool_leaves_roundtrip_exactly():
+    t = _int_template(40)
+    store = ClientStateStore(t, 4)
+    assert store.pi > 0
+    _tree_equal(store.gather_one(1), t)
+    frow, irow = store.flatten(t)
+    assert frow.dtype == jnp.float32 and frow.shape == (store.p,)
+    assert irow.dtype == jnp.int32 and irow.shape == (store.pi,)
+    _tree_equal(store.unflatten((frow, irow)), t)
+    t2 = _int_template(41)
+    store.scatter_params([0, 2], t2)
+    _tree_equal(store.gather_one(2), t2)
+    _tree_equal(store.gather_one(3), t)
+    stacked = store.gather([2, 3])
+    _tree_equal(jax.tree_util.tree_map(lambda l: l[0], stacked), t2)
+    _tree_equal(jax.tree_util.tree_map(lambda l: l[1], stacked), t)
+
+
+def test_store_int_leaf_merge_scatter_matches_dict_merge():
+    """The fused merge over a mixed float/int tree must equal the dict
+    path's staleness_weighted_merge bit for bit — int leaves ride the
+    same cast-through-f32 merge, then land back in the sidecar."""
+    g = _int_template(42)
+    store = ClientStateStore(g, 6)
+    stacked = _stack([_int_template(50 + i) for i in range(3)])
+    alphas = [0.5, 0.0, 0.25]
+    coef = staleness_merge_coefficients(alphas)
+    new_params, _ = store.merge_scatter([0, 2, 4], stacked, coef, g)
+    want = staleness_weighted_merge(g, stacked, alphas)
+    _tree_equal(new_params, want)
+    _tree_equal(store.gather_one(2), new_params)
+    _tree_equal(store.gather_one(1), g)
 
 
 def test_scatter_params_targets_only_given_rows():
@@ -344,51 +403,121 @@ def test_use_store_default_is_windowed_only():
     _hist_equal(h0, hf)                               # still identical
 
 
-def test_non_float_template_falls_back_to_dict_with_warning():
-    """A trainer whose params carry a non-float leaf cannot live in the
-    f32 store — the runner must degrade to the dict path, not crash."""
+class IntLeafTrainer(FakeLoopTrainer):
+    """Params carry a non-float leaf (a step counter): lives in the
+    store's int32 sidecar segment and round-trips exactly."""
 
-    class IntLeafTrainer(FakeLoopTrainer):
-        def init_params(self, seed=0):
-            return {"w": jnp.zeros(3, jnp.float32),
-                    "step": jnp.zeros((), jnp.int32)}
+    def init_params(self, seed=0):
+        return {"w": jnp.zeros(3, jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
 
-        def local_train(self, params, client_id, rnd_seed):
-            return {"w": params["w"] + (client_id + 1.0),
-                    "step": params["step"] + 1}, 10.0 + client_id
+    def local_train(self, params, client_id, rnd_seed):
+        return {"w": params["w"] + (client_id + 1.0),
+                "step": params["step"] + 1}, 10.0 + client_id
 
+
+def test_int_leaf_template_runs_on_the_store_path():
+    """The PR 4 TypeError fallback is gone: a non-float params template
+    lives in the store (int32 sidecar) and the history still matches
+    the dict reference bit for bit."""
     fl = FLConfig(n_clients=4, tau=2, rounds=2, seed=7)
-    with pytest.warns(UserWarning, match="ClientStateStore"):
-        hs = run_fedbuff(IntLeafTrainer(), _net(fl), fl, window=2,
-                         eval_every=8, use_store=True)
-    assert hs.meta["store"] is False
+    hs = run_fedbuff(IntLeafTrainer(), _net(fl), fl, window=2,
+                     eval_every=8, use_store=True)
+    assert hs.meta["store"] is True
+    assert hs.meta["store_path"] == "store"
     hd = run_fedbuff(IntLeafTrainer(), _net(fl), fl, window=2,
                      eval_every=8, use_store=False)
     _hist_equal(hs, hd)
 
 
-def test_kernel_agg_falls_back_to_dict_path_with_warning():
-    """The store's fused merge does not dispatch the Pallas fedagg
-    kernel yet: combining use_kernel_agg with the store must warn and
-    take the dict path, keeping kernel-merge numerics intact."""
-    fl = FLConfig(n_clients=6, tau=2, rounds=2, seed=4)
-    with pytest.warns(UserWarning, match="use_kernel_agg"):
-        hk = run_fedbuff(TinyCohortTrainer(), _net(fl), fl, window=2,
-                         eval_every=8, use_store=True,
-                         use_kernel_agg=True)
-    assert hk.meta["store"] is False
-    hd = run_fedbuff(TinyCohortTrainer(), _net(fl), fl, window=2,
+@pytest.mark.parametrize("trainer_cls", [IntLeafTrainer,
+                                         TinyCohortTrainer])
+def test_kernel_agg_runs_on_the_store_path(trainer_cls):
+    """The store's fused merge dispatches the folded Pallas fedagg
+    kernel (interpret-mode on CPU): use_kernel_agg + store is the
+    default hot path now, bit-identical to the dict reference running
+    the same kernel merge."""
+    fl = FLConfig(n_clients=6, tau=2, rounds=3, seed=4)
+    hk = run_fedbuff(trainer_cls(), _net(fl), fl, window=2,
+                     eval_every=8, use_store=True, use_kernel_agg=True)
+    assert hk.meta["store"] is True
+    assert hk.meta["store_path"] == "store"
+    assert hk.meta["kernel_agg"] is True
+    hd = run_fedbuff(trainer_cls(), _net(fl), fl, window=2,
                      eval_every=8, use_store=False, use_kernel_agg=True)
     _hist_equal(hk, hd)
-    # auto-resolution (use_store=None) picks the dict path SILENTLY —
-    # it is exactly the pre-store behavior, nothing asked for is lost
-    import warnings as _w
-    with _w.catch_warnings():
-        _w.simplefilter("error")
-        ha = run_fedbuff(TinyCohortTrainer(), _net(fl), fl, window=2,
-                         eval_every=8, use_kernel_agg=True)
-    assert ha.meta["store"] is False
+    # auto-resolution (use_store=None) now ALSO picks the store when
+    # windows batch — kernel agg no longer forces the dict path
+    ha = run_fedbuff(trainer_cls(), _net(fl), fl, window=2,
+                     eval_every=8, use_kernel_agg=True)
+    assert ha.meta["store_path"] == "store"
+    assert ha.meta["store_reason"] == "auto-windowed"
     _hist_equal(ha, hd)
+
+
+def test_kernel_agg_fedasync_and_feddct_async_store_parity():
+    """The remaining acceptance-gate methods on the kernel + store
+    combination: run_fedasync (windowed) and run_feddct_async."""
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=4, seed=3)
+    hs = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=3,
+                      eval_every=4, use_store=True, use_kernel_agg=True)
+    hd = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=3,
+                      eval_every=4, use_store=False, use_kernel_agg=True)
+    _hist_equal(hs, hd)
+    assert hs.meta["store_path"] == "store"
+
+    fl2 = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                   seed=5, beta=1.1)
+    ha = run_feddct_async(TinyCohortTrainer(), _net(fl2), fl2,
+                          use_store=True, use_kernel_agg=True)
+    hb = run_feddct_async(TinyCohortTrainer(), _net(fl2), fl2,
+                          use_store=False, use_kernel_agg=True)
+    _hist_equal(ha, hb)
+    assert ha.meta["store_path"] == "store"
+
+
+def test_engine_train_window_kernel_matches_cohort_plus_kernel_merge():
+    """Fused store window with kernel dispatch must reproduce the dict
+    path's train_cohort + kernel merge_staleness bit for bit — padded
+    rows (coef 0) included."""
+    tr = TinyCohortTrainer()
+    eng = make_engine(tr, use_kernel_agg=True)
+    g = tr.init_params(0)
+    starts = [tr.init_params(i + 1) for i in range(3)]
+    ids, seeds = [4, 1, 6], [11, 22, 33]
+    alphas = [0.5, 0.0, 0.3]
+
+    store = ClientStateStore(g, 8)
+    for c, t in zip(ids, starts):
+        store.scatter_params([c], t)
+    new_params, _ = eng.train_window(store, g, ids, seeds, alphas)
+
+    eng2 = make_engine(tr, use_kernel_agg=True)
+    stacked, _ = eng2.train_cohort(starts, ids, seeds)
+    want = eng2.merge_staleness(g, stacked, alphas)
+    _tree_equal(new_params, want)
+
+
+def test_store_reason_records_resolved_path():
+    """Observability: the auto-resolved snapshot path is recorded on
+    the RunHistory meta instead of a warning, so benchmarks/tests can
+    assert which path actually ran."""
+    fl = FLConfig(n_clients=6, tau=2, rounds=2, seed=6)
+    h0 = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=0,
+                      eval_every=8)
+    assert h0.meta["store_path"] == "dict"
+    assert h0.meta["store_reason"] == "window0-sequential"
+    hoff = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=2,
+                        eval_every=8, use_store=False)
+    assert hoff.meta["store_path"] == "dict"
+    assert hoff.meta["store_reason"] == "forced-off"
+    hw = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=2,
+                      eval_every=8)
+    assert hw.meta["store_path"] == "store"
+    assert hw.meta["store_reason"] == "auto-windowed"
+    hf = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=0,
+                      eval_every=8, use_store=True)
+    assert hf.meta["store_reason"] == "forced-on"
 
 
 @pytest.mark.slow
