@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from common import add_json_arg, maybe_write_json
 from repro.config import get_arch
 from repro.config.base import FLConfig
 from repro.core.aggregation import weighted_average_stacked
@@ -87,6 +88,7 @@ def main(argv=None):
                     choices=["small", "paper", "both"])
     ap.add_argument("--agg-p", type=int, default=1 << 20)
     ap.add_argument("--out", default=None)
+    add_json_arg(ap, "engine")
     args = ap.parse_args(argv)
 
     results = {}
@@ -120,6 +122,10 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(results, f, indent=2)
         print(f"[bench_engine] results -> {args.out}")
+    maybe_write_json(args, "engine", results,
+                     extra_context={"configs": configs,
+                                    "rounds": args.rounds,
+                                    "agg_p": args.agg_p})
     return results
 
 

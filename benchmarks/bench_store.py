@@ -12,8 +12,17 @@ update budget; the only difference is where client snapshots live:
   model copies, re-stacked leaf by leaf (``tree_map(jnp.stack)``) on
   every drained window (the PR 2 behaviour);
 * store — ``use_store=True``: one flat (N, P) device buffer, gathered
-  per window and re-scattered by the fused donating merge+scatter
-  program (``engine.train_window``).
+  per window and re-scattered by the donating store programs
+  (``engine.train_window``);
+* tiered — ``store_capacity=8`` < clients: the hot/cold residency
+  store (``TieredClientStateStore``) with only 8 rows on device, so
+  every window promotes misses and evicts dirty LRU victims to host.
+
+A non-smoke run also reports the population-scale residency
+microbench (``--residency-rows``, default 100k logical clients over a
+512-row hot tier): rows/sec through the gather/re-snapshot cycle plus
+promote/demote counters.  The cold tier is sparse, so N=100k fits a
+2-core CPU box.
 
 Histories are bit-identical by construction (asserted every run), so
 the harness measures pure server-step overhead: merged client updates
@@ -59,11 +68,13 @@ def ManyLeafTrainer():
 
 
 def run_arm(trainer, fl, seed, *, use_store: bool, window: int,
-            reps: int):
+            reps: int, store_capacity=None):
     """``reps`` timed runs over identical realizations (the shared
     trainer keeps both arms' jit caches warm after the warmup pass, so
     reps measure steady-state server overhead); best-rep summary +
-    median-of-reps gate statistic via ``common.timed_reps``."""
+    median-of-reps gate statistic via ``common.timed_reps``.
+    ``store_capacity`` < n_clients selects the tiered hot/cold store
+    (histories stay bit-identical; the arm measures residency cost)."""
     hists = []
 
     def once():
@@ -71,14 +82,17 @@ def run_arm(trainer, fl, seed, *, use_store: bool, window: int,
                               fl.delay_std, fl.mu, fl.failure_delay, seed)
         runner = AsyncRunner(trainer, net, fl, window=window,
                              eval_every=fl.rounds * fl.tau + 1,
-                             use_store=use_store)
+                             use_store=use_store,
+                             store_capacity=store_capacity)
         t0 = time.perf_counter()
         hist = runner.run()
         wall = time.perf_counter() - t0
         hists.append(hist)
         return wall, sum(runner.cohort_sizes), {
             "mean_cohort": hist.meta["mean_cohort"],
-            "n_drains": hist.meta["n_drains"]}
+            "n_drains": hist.meta["n_drains"],
+            "residency": hist.meta["residency"],
+            "hot_rows": hist.meta["hot_rows"]}
 
     return timed_reps(once, reps), hists[-1]
 
@@ -106,6 +120,41 @@ def stacking_microbench(cohort: int):
             "store_gather_us": time_fn(gather_arm, iters=30)}
 
 
+def residency_microbench(n_rows: int, *, capacity: int = 512,
+                         cohort: int = 16, windows: int = 64,
+                         seed: int = 0):
+    """Population-scale tiered store: ``n_rows`` logical clients with
+    only ``capacity`` rows resident on device and the rest in the
+    sparse host cold tier (untouched clients cost nothing — the tier
+    materializes a row on first write, so N=100k fits a 2-core CPU
+    box).  Each window gathers a random cohort (promoting misses,
+    evicting dirty LRU victims write-behind) and re-snapshots it, the
+    same hot-path cycle ``AsyncRunner`` drives.  Reports rows/sec
+    through the residency layer plus the promote/demote counters."""
+    import numpy as np
+    from repro.core.residency import TieredClientStateStore
+    trainer = ManyLeafTrainer()
+    params = trainer.init_params(0)
+    store = TieredClientStateStore(params, n_rows, capacity=capacity)
+    rng = np.random.default_rng(seed)
+    picks = [sorted(rng.choice(n_rows, size=cohort, replace=False).tolist())
+             for _ in range(windows)]
+    # warm the per-cohort-width jit bucket off the clock
+    store.ensure_window(picks[0])
+    jax.block_until_ready(jax.tree_util.tree_leaves(store.gather(picks[0])))
+    store.scatter_params(picks[0], params)
+    t0 = time.perf_counter()
+    for ids in picks:
+        store.ensure_window(ids)
+        jax.block_until_ready(jax.tree_util.tree_leaves(store.gather(ids)))
+        store.scatter_params(ids, params)
+    wall = time.perf_counter() - t0
+    return {"n_rows": n_rows, "capacity": capacity, "cohort": cohort,
+            "windows": windows, "wall_s": wall,
+            "rows_per_sec": windows * cohort / wall,
+            "n_promoted": store.n_promoted, "n_demoted": store.n_demoted}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=32)
@@ -116,10 +165,19 @@ def main(argv=None):
                          "completions (the acceptance gate's cohort 16)")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hot-rows", type=int, default=8,
+                    help="tiered-arm hot-tier capacity (< --clients so "
+                         "LRU eviction and host round-trips fire)")
+    ap.add_argument("--residency-rows", type=int, default=100_000,
+                    help="population size for the tiered-store "
+                         "residency microbench (0 = skip; not run "
+                         "under --smoke)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (< 30 s); exits non-zero unless "
                          "the store arm beats dict-of-pytrees events/sec "
-                         "at cohort 16 with bit-identical histories")
+                         "at cohort 16 and all three arms (dict, dense "
+                         "store, tiered residency) produce bit-identical "
+                         "histories")
     add_json_arg(ap, "store")
     args = ap.parse_args(argv)
 
@@ -134,29 +192,39 @@ def main(argv=None):
                   rounds=args.rounds, mu=0.0, primary_frac=0.7,
                   seed=args.seed, lr=0.003)
 
-    # warm both arms' jit caches with a throwaway run each (cohort
+    arms = (("dict", dict(use_store=False)),
+            ("store", dict(use_store=True)),
+            ("tiered", dict(use_store=True,
+                            store_capacity=args.hot_rows)))
+
+    # warm the arms' jit caches with a throwaway run each (cohort
     # widths are a pure function of (network, fl, window))
     trainer = ManyLeafTrainer()
-    for use_store in (False, True):
-        run_arm(trainer, fl, args.seed, use_store=use_store,
-                window=args.window, reps=1)
+    for _, kw in arms:
+        run_arm(trainer, fl, args.seed, window=args.window, reps=1, **kw)
 
     results = {}
     hists = {}
-    for label, use_store in (("dict", False), ("store", True)):
+    for label, kw in arms:
         results[label], hists[label] = run_arm(
-            trainer, fl, args.seed, use_store=use_store,
-            window=args.window, reps=args.reps)
+            trainer, fl, args.seed, window=args.window,
+            reps=args.reps, **kw)
         r = results[label]
-        print(f"[{label:5s}] events={r['events']:4d}  "
+        print(f"[{label:6s}] events={r['events']:4d}  "
               f"wall={r['wall_s']:6.3f}s  "
               f"{r['events_per_sec']:8.1f} ev/s  "
               f"mean_cohort={r['mean_cohort']:5.2f}  "
-              f"drains={r['n_drains']:3d}")
+              f"drains={r['n_drains']:3d}  "
+              f"residency={r['residency']}")
 
-    hs, hd = hists["store"], hists["dict"]
-    identical = (hs.rounds == hd.rounds and hs.times == hd.times
-                 and hs.accuracy == hd.accuracy)
+    hs, hd, ht = hists["store"], hists["dict"], hists["tiered"]
+
+    def _same(a, b):
+        return (a.rounds == b.rounds and a.times == b.times
+                and a.accuracy == b.accuracy)
+
+    identical = _same(hs, hd)
+    tiered_identical = _same(ht, hs)
     speedup = (results["store"]["events_per_sec"]
                / results["dict"]["events_per_sec"])
     speedup_median = (results["store"]["events_per_sec_median"]
@@ -165,27 +233,44 @@ def main(argv=None):
     results["speedup"] = speedup
     results["speedup_median"] = speedup_median
     results["histories_identical"] = identical
+    results["tiered_histories_identical"] = tiered_identical
     results["stacking_cohort16"] = micro
     print(f"[bench_store] store/dict events/sec: {speedup:.2f}x "
           f"(median {speedup_median:.2f}x)  "
-          f"histories {'IDENTICAL' if identical else 'MISMATCH'}")
+          f"histories {'IDENTICAL' if identical else 'MISMATCH'}  "
+          f"tiered {'IDENTICAL' if tiered_identical else 'MISMATCH'}")
     print(f"[bench_store] cohort-16 snapshot assembly: "
           f"tree_map(stack)={micro['stack_us']:8.1f}us  "
           f"store.gather={micro['store_gather_us']:8.1f}us")
 
+    if args.residency_rows > 0 and not args.smoke:
+        res = residency_microbench(args.residency_rows)
+        results["residency"] = res
+        print(f"[bench_store] residency N={res['n_rows']} "
+              f"hot={res['capacity']}: "
+              f"{res['rows_per_sec']:8.1f} rows/s  "
+              f"promoted={res['n_promoted']}  "
+              f"demoted={res['n_demoted']}")
+
     maybe_write_json(args, "store", results, extra_context={
         "store_arm_path": hs.meta.get("store_path"),
         "dict_arm_path": hd.meta.get("store_path"),
+        "tiered_residency": ht.meta.get("residency"),
         "kernel_agg": hs.meta.get("kernel_agg"),
     })
     if args.smoke:
-        # history identity stays STRICT (bitwise); only the timing
-        # comparison is deflaked via the median.  The arms must also
-        # have RESOLVED to the snapshot paths they claim to measure.
-        ok = (identical and speedup_median > 1.0
+        # history identity stays STRICT (bitwise) across all three
+        # arms; only the timing comparison is deflaked via the median.
+        # The arms must also have RESOLVED to the snapshot paths they
+        # claim to measure — the tiered arm must really have run with
+        # a hot tier smaller than the population (eviction fired).
+        ok = (identical and tiered_identical and speedup_median > 1.0
               and results["store"]["mean_cohort"] > 1.0
               and hs.meta.get("store_path") == "store"
-              and hd.meta.get("store_path") == "dict")
+              and hd.meta.get("store_path") == "dict"
+              and ht.meta.get("residency") == "tiered-host"
+              and ht.meta.get("hot_rows") == args.hot_rows
+              and ht.meta.get("hot_rows") < args.clients)
         print(f"[bench_store] smoke {'PASS' if ok else 'FAIL'}")
         raise SystemExit(0 if ok else 1)
     return results

@@ -6,6 +6,7 @@ from repro.core.aggregation import (aggregate_or_keep,
                                     staleness_merge,
                                     staleness_weighted_merge)
 from repro.core.engine import BatchedClientEngine, make_engine
+from repro.core.residency import TieredClientStateStore
 from repro.core.state import ClientStateStore
 from repro.core.scheduler import run_feddct
 from repro.core.baselines import (run_fedavg, run_tifl, run_fedasync,
@@ -18,7 +19,8 @@ __all__ = [
     "cstt", "tier_timeouts", "move_tier", "select_from_tier",
     "aggregate_or_keep", "weighted_average", "weighted_average_stacked",
     "staleness_merge", "staleness_weighted_merge",
-    "BatchedClientEngine", "ClientStateStore", "make_engine",
+    "BatchedClientEngine", "ClientStateStore", "TieredClientStateStore",
+    "make_engine",
     "run_feddct", "run_fedavg", "run_tifl", "run_fedasync",
     "run_fedasync_sequential", "run_fedbuff", "run_feddct_async",
     "run_fedprox", "run_method",

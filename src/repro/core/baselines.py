@@ -202,7 +202,8 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
                  use_kernel_agg: bool = False, verbose: bool = False,
                  eval_every: int = 5, window: int = 0,
                  window_secs: float = 0.0, mesh=None,
-                 use_store=None) -> RunHistory:
+                 use_store=None, store_capacity=None,
+                 store_cold_dir=None) -> RunHistory:
     """FedAsync on the event-driven runtime.
 
     ``window=0`` (default) reproduces the sequential one-merge-per-event
@@ -213,20 +214,26 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
     ``ClientStateStore`` by default; ``use_store`` is tri-state (None =
     auto: store exactly when windows batch, False = dict-of-pytrees
     reference path — histories bit-identical either way).
+    ``store_capacity`` caps the hot device rows (tiered residency with
+    EventQueue-driven prefetch; ``store_cold_dir`` spills the cold tier
+    to disk) — histories stay bit-identical at any capacity.
     """
     from repro.runtime.async_loop import AsyncRunner
     return AsyncRunner(trainer, network, fl, method="fedasync",
                        engine=engine, use_kernel_agg=use_kernel_agg,
                        window=window, window_secs=window_secs,
                        eval_every=eval_every, verbose=verbose,
-                       mesh=mesh, use_store=use_store).run()
+                       mesh=mesh, use_store=use_store,
+                       store_capacity=store_capacity,
+                       store_cold_dir=store_cold_dir).run()
 
 
 def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                 use_kernel_agg: bool = False, verbose: bool = False,
                 eval_every: int = 5, window: int = 0,
                 window_secs: float = 0.0, mesh=None,
-                use_store=None) -> RunHistory:
+                use_store=None, store_capacity=None,
+                store_cold_dir=None) -> RunHistory:
     """FedBuff [Nguyen'22]: async with a K-completion aggregation goal
     (default K = fl.tau, the sync methods' per-round cohort size)."""
     from repro.runtime.async_loop import AsyncRunner
@@ -234,7 +241,9 @@ def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                        engine=engine, use_kernel_agg=use_kernel_agg,
                        window=window or fl.tau, window_secs=window_secs,
                        eval_every=eval_every, verbose=verbose,
-                       mesh=mesh, use_store=use_store).run()
+                       mesh=mesh, use_store=use_store,
+                       store_capacity=store_capacity,
+                       store_cold_dir=store_cold_dir).run()
 
 
 def run_feddct_async(trainer, network, fl: FLConfig, **kw) -> RunHistory:

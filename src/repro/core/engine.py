@@ -210,6 +210,13 @@ class BatchedClientEngine:
         coef = staleness_merge_coefficients(alphas)
         merge_kw = dict(use_kernel=self.use_kernel_agg,
                         interpret=self.interpret)
+        # residency hook (duck-typed; dense stores don't have it): a
+        # tiered store stages the whole window's rows in one batched
+        # host->device promotion, so the looped fallback doesn't
+        # promote one row per gather_one.
+        stage = getattr(store, "ensure_window", None)
+        if stage is not None:
+            stage(ids)
         if self._can_cohort:
             run_ids, run_seeds = self._pad_pow2(ids, seeds)
             starts = store.gather(run_ids)

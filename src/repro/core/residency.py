@@ -1,0 +1,392 @@
+"""Tiered client-state residency: hot device rows, cold host rows.
+
+The dense ``ClientStateStore`` is the right shape for thousands of
+clients but caps the population at device memory — its ``(N, P)``
+buffer must hold every client at once.  ``TieredClientStateStore``
+keeps the SAME public API (``gather``/``scatter``/``merge_scatter``/
+``flatten``/``unflatten``), so ``engine.train_window`` and the async
+runtime are unchanged consumers, but splits residency:
+
+* **hot tier** — a ``(capacity, Pf)`` f32 device buffer (plus the
+  ``(capacity, Pi)`` int32 sidecar), holding the rows of active and
+  imminent cohorts.  All device programs are the dense store's own
+  jitted programs, just addressed by hot SLOT instead of client id, so
+  gather/merge/scatter stay one device dispatch each.
+* **cold tier** — every other client's row, as pinned host memory
+  (``HostColdTier``, sparse: untouched clients cost nothing) or
+  spilled to disk in ``checkpoint/ckpt.py`` chunks (``DiskColdTier``).
+
+Residency moves are pure copies of f32/int32 rows (device<->host
+round-trips are bit-exact), and every merge runs either the dense
+store's fused program or the same folded-merge subgraph compiled
+standalone — histories are BIT-IDENTICAL to the dense store on CPU's
+sequential row reduction, for any capacity down to 1 (gated in
+``tests/test_residency.py`` with randomized op interleavings).
+
+Mechanics:
+
+* promotion (cold -> hot) happens on demand in ``gather``/
+  ``merge_scatter``, or ahead of time via ``prefetch`` — the async
+  runtime drives it from the ``EventQueue`` lookahead (finish times
+  are already in the heap when a window is dispatched, so the NEXT
+  window's rows stage host->device while the current cohort trains);
+* eviction is LRU over resident clients; ``prefetch(keep=...)`` pins
+  the in-flight cohort so staging can never evict what is training;
+* demotion is write-behind: only rows dirtied while hot (merged or
+  scattered into) are copied back to the cold tier; clean rows are
+  dropped for free;
+* a cohort wider than the hot tier still works — ``gather`` assembles
+  mixed hot/cold row blocks on host, and ``merge_scatter`` (inherited:
+  standalone merge program + residency-aware scatter) lands the new
+  global row in whichever tier each merged client lives in.  The merge
+  program itself never touches the buffers, so its bits cannot depend
+  on the residency layout (re-tracing the merge into a buffer-shaped
+  jit is NOT bit-stable on XLA CPU — FMA contraction differs per
+  compilation unit, the PR 5 kernel-dispatch lesson).
+
+Donation contract (extends the dense store's): the store owns BOTH
+tiers.  Callers must not hold references into ``store.buffer``/
+``store.int_buffer`` across ``scatter``/``merge_scatter``/``gather``/
+``prefetch`` calls — any of them may demote rows and donate the hot
+buffers in place — and must not hold references to demoted host rows
+either (the cold tier rebinds them on the next write-behind).
+``gather``/``gather_one`` return fresh arrays and are always safe.
+"""
+
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.core.state import ClientStateStore
+
+
+class HostColdTier:
+    """Sparse pinned-host cold tier: client id -> (f32 row, int32 row).
+
+    Rows never written read as the template row (the dense store
+    initializes every row to the template, so the default is exact),
+    which makes a 1M-client store cost O(touched clients), not O(N).
+    """
+
+    def __init__(self, f_template: np.ndarray, i_template: np.ndarray):
+        # owned copies: device arrays view as read-only, and zero-width
+        # np.tile of a read-only row stays read-only
+        self._f0 = np.array(f_template, np.float32)
+        self._i0 = np.array(i_template, np.int32)
+        self._rows: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def read(self, ids: Sequence[int]):
+        """-> ((k, Pf) f32, (k, Pi) int32) row blocks (fresh copies)."""
+        f = np.stack([self._rows[c][0] if c in self._rows else self._f0
+                      for c in ids])
+        i = np.stack([self._rows[c][1] if c in self._rows else self._i0
+                      for c in ids])
+        return f, i
+
+    def write(self, ids: Sequence[int], frows: np.ndarray,
+              irows: np.ndarray) -> None:
+        """Write rows for ``ids``; a 1-D ``frows`` broadcasts one row
+        to every id (the scatter-one-global-row shape)."""
+        frows = np.asarray(frows, np.float32)
+        irows = np.asarray(irows, np.int32)
+        if frows.ndim == 1:
+            fr, ir = frows.copy(), irows.copy()
+            for c in ids:
+                self._rows[int(c)] = (fr, ir)
+            return
+        for k, c in enumerate(ids):
+            self._rows[int(c)] = (frows[k].copy(), irows[k].copy())
+
+
+class DiskColdTier:
+    """Disk-spilled cold tier: rows grouped into fixed-size chunks,
+    each persisted as one ``checkpoint/ckpt.py`` npz checkpoint (chunk
+    index = step), with a small in-memory LRU of loaded chunks.
+
+    f32/int32 npz round-trips are bit-exact, so spilling through disk
+    preserves the tiered store's bit-identity guarantee.
+    """
+
+    def __init__(self, ckpt_dir: str, n_rows: int, f_template: np.ndarray,
+                 i_template: np.ndarray, *, chunk: int = 512,
+                 cache_chunks: int = 4):
+        if chunk < 1 or cache_chunks < 1:
+            raise ValueError("chunk and cache_chunks must be >= 1")
+        self.dir = ckpt_dir
+        os.makedirs(self.dir, exist_ok=True)
+        self.n = int(n_rows)
+        self.chunk = int(chunk)
+        self.cache_chunks = int(cache_chunks)
+        self._f0 = np.array(f_template, np.float32)
+        self._i0 = np.array(i_template, np.int32)
+        self._cache: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
+        self._dirty: set = set()
+
+    def _rows_in(self, cid: int) -> int:
+        return min(self.chunk, self.n - cid * self.chunk)
+
+    def _load(self, cid: int) -> Dict[str, np.ndarray]:
+        blk = self._cache.get(cid)
+        if blk is not None:
+            self._cache.move_to_end(cid)
+            return blk
+        rows = self._rows_in(cid)
+        path = os.path.join(self.dir, f"ckpt_{cid:08d}.npz")
+        if os.path.exists(path):
+            like = {"f": np.zeros((rows, self._f0.shape[0]), np.float32),
+                    "i": np.zeros((rows, self._i0.shape[0]), np.int32)}
+            loaded = load_checkpoint(self.dir, cid, like)
+            # np.array copies: a loaded device array views as read-only,
+            # and chunk blocks must stay writable for row updates
+            blk = {"f": np.array(loaded["f"], np.float32),
+                   "i": np.array(loaded["i"], np.int32)}
+        else:
+            blk = {"f": np.tile(self._f0, (rows, 1)),
+                   "i": np.tile(self._i0, (rows, 1))}
+        self._cache[cid] = blk
+        while len(self._cache) > self.cache_chunks:
+            old_cid, old_blk = self._cache.popitem(last=False)
+            if old_cid in self._dirty:
+                save_checkpoint(self.dir, old_cid, old_blk)
+                self._dirty.discard(old_cid)
+        return blk
+
+    def read(self, ids: Sequence[int]):
+        f = np.empty((len(ids), self._f0.shape[0]), np.float32)
+        i = np.empty((len(ids), self._i0.shape[0]), np.int32)
+        for k, c in enumerate(ids):
+            c = int(c)
+            blk = self._load(c // self.chunk)
+            off = c % self.chunk
+            f[k], i[k] = blk["f"][off], blk["i"][off]
+        return f, i
+
+    def write(self, ids: Sequence[int], frows: np.ndarray,
+              irows: np.ndarray) -> None:
+        frows = np.asarray(frows, np.float32)
+        irows = np.asarray(irows, np.int32)
+        one_row = frows.ndim == 1
+        for k, c in enumerate(ids):
+            c = int(c)
+            cid = c // self.chunk
+            blk = self._load(cid)
+            off = c % self.chunk
+            blk["f"][off] = frows if one_row else frows[k]
+            blk["i"][off] = irows if one_row else irows[k]
+            self._dirty.add(cid)
+
+    def flush(self) -> None:
+        """Persist every dirty cached chunk (the cache is write-behind
+        too; call this before handing the directory to another store)."""
+        for cid in sorted(self._dirty):
+            save_checkpoint(self.dir, cid, self._cache[cid])
+        self._dirty.clear()
+
+
+class TieredClientStateStore(ClientStateStore):
+    """``ClientStateStore`` with hot-device / cold-host row residency.
+
+    ``capacity`` hot rows live on device; the other ``n - capacity``
+    rows live in the cold tier (``cold="host"`` pinned memory, or
+    ``cold="disk"`` ckpt-chunk spill under ``cold_dir``).  Same public
+    API and bit-identical histories as the dense store — see the
+    module docstring for the residency mechanics.
+    """
+
+    def __init__(self, template_params, n_clients: int, *, capacity: int,
+                 cold: str = "host", cold_dir: Optional[str] = None,
+                 chunk: int = 512, mesh=None):
+        if mesh is not None and int(getattr(mesh, "size", 1)) > 1:
+            raise ValueError(
+                "tiered residency manages one device's memory; shard the "
+                "dense store over a client mesh instead (mesh= on "
+                "ClientStateStore)")
+        capacity = int(capacity)
+        if capacity < 1:
+            raise ValueError(f"hot tier needs >= 1 row, got {capacity}")
+        # set before super().__init__ — _buffer_rows() reads it
+        self.capacity = min(capacity, int(n_clients))
+        super().__init__(template_params, n_clients, mesh=None)
+        frow, irow = self._fns.flatten(template_params)
+        f0, i0 = np.asarray(frow, np.float32), np.asarray(irow, np.int32)
+        if cold == "host":
+            self.cold = HostColdTier(f0, i0)
+        elif cold == "disk":
+            if not cold_dir:
+                raise ValueError("cold='disk' needs cold_dir")
+            self.cold = DiskColdTier(cold_dir, self.n, f0, i0, chunk=chunk)
+        else:
+            raise ValueError(f"unknown cold tier {cold!r} "
+                             "(expected 'host' or 'disk')")
+        self.residency = f"tiered-{cold}"
+        # client -> hot slot, insertion order == LRU order (oldest first)
+        self._slots: "OrderedDict[int, int]" = OrderedDict()
+        self._free: List[int] = list(range(self.capacity))[::-1]
+        self._dirty: set = set()
+        self.n_promoted = 0
+        self.n_demoted = 0
+
+    def _buffer_rows(self) -> int:
+        return self.capacity
+
+    # -- residency core -------------------------------------------------
+    @property
+    def hot_clients(self) -> tuple:
+        """Resident client ids, LRU order (oldest first)."""
+        return tuple(self._slots)
+
+    def _ensure_hot(self, want: Sequence[int], protect=frozenset(),
+                    partial: bool = False) -> List[int]:
+        """Make ``want`` (unique client ids) resident in the hot tier.
+
+        Eviction is LRU over residents outside ``protect`` and
+        ``want``; dirty victims are written behind to the cold tier
+        (one batched device->host read) before their slots are reused,
+        and promotions land as one batched host->device write.
+        ``partial=True`` (prefetch) stops quietly when every remaining
+        slot is pinned instead of raising.  Returns the clients
+        actually promoted.
+        """
+        want = [int(c) for c in want]
+        pinned = {int(c) for c in protect} | set(want)
+        staged: List[Tuple[int, int]] = []
+        demote_c: List[int] = []
+        demote_s: List[int] = []
+        for c in want:
+            if c in self._slots:
+                self._slots.move_to_end(c)
+                continue
+            if self._free:
+                slot = self._free.pop()
+            else:
+                victim = next((v for v in self._slots if v not in pinned),
+                              None)
+                if victim is None:
+                    if partial:
+                        break
+                    raise RuntimeError(
+                        f"hot tier exhausted: capacity {self.capacity} "
+                        f"cannot stage {len(set(want))} rows with "
+                        f"{len(set(protect))} pinned")
+                slot = self._slots.pop(victim)
+                if victim in self._dirty:
+                    self._dirty.discard(victim)
+                    demote_c.append(victim)
+                    demote_s.append(slot)
+            self._slots[c] = slot
+            staged.append((c, slot))
+        if demote_c:
+            # write-behind: read the victims' rows BEFORE the promotion
+            # write donates the buffer (np.asarray forces completion)
+            frows, irows = self._fns.read_rows(self.buf, self.ibuf,
+                                               self._ids(demote_s))
+            self.cold.write(demote_c, np.asarray(frows), np.asarray(irows))
+            self.n_demoted += len(demote_c)
+        if staged:
+            cf, ci = self.cold.read([c for c, _ in staged])
+            self.buf, self.ibuf = self._fns.write_rows(
+                self.buf, self.ibuf, self._ids([s for _, s in staged]),
+                cf, ci)
+            self.n_promoted += len(staged)
+        return [c for c, _ in staged]
+
+    def prefetch(self, client_ids: Sequence[int], keep=()) -> List[int]:
+        """EventQueue-driven staging: promote the NEXT window's rows
+        while the current cohort trains (the promotion dispatches
+        asynchronously; nothing blocks on it).  ``keep`` pins the
+        in-flight cohort so staging can never evict what is training.
+        Purely a hint — ``gather``/``merge_scatter`` re-stage anything
+        missing, so a stale lookahead costs extra swaps, never
+        correctness.  Returns the clients actually promoted."""
+        uniq = list(dict.fromkeys(int(x) for x in client_ids))
+        return self._ensure_hot(uniq[:self.capacity], protect=keep,
+                                partial=True)
+
+    def ensure_window(self, client_ids: Sequence[int]) -> None:
+        """Stage a whole window's rows in one batched promotion (the
+        engine calls this before gathering, so the looped per-client
+        fallback doesn't promote one row at a time)."""
+        uniq = list(dict.fromkeys(int(x) for x in client_ids))
+        if len(uniq) <= self.capacity:
+            self._ensure_hot(uniq)
+
+    # -- gather / scatter (dense API, residency-aware) ------------------
+    def _host_rows(self, idl: List[int]):
+        """Assemble (k, Pf)/(k, Pi) row blocks for ``idl`` from BOTH
+        tiers on host — the cohort-wider-than-capacity gather path.
+        Device->host copies of f32/int32 rows are bit-exact."""
+        uniq = list(dict.fromkeys(idl))
+        vals: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        hot = [c for c in uniq if c in self._slots]
+        if hot:
+            frows, irows = self._fns.read_rows(
+                self.buf, self.ibuf,
+                self._ids([self._slots[c] for c in hot]))
+            frows, irows = np.asarray(frows), np.asarray(irows)
+            for k, c in enumerate(hot):
+                vals[c] = (frows[k], irows[k])
+        missing = [c for c in uniq if c not in self._slots]
+        if missing:
+            cf, ci = self.cold.read(missing)
+            for k, c in enumerate(missing):
+                vals[c] = (cf[k], ci[k])
+        f = np.stack([vals[c][0] for c in idl])
+        i = np.stack([vals[c][1] for c in idl])
+        return f, i
+
+    def gather(self, ids: Sequence[int]):
+        idl = [int(c) for c in ids]
+        uniq = list(dict.fromkeys(idl))
+        if len(uniq) <= self.capacity:
+            self._ensure_hot(uniq)
+            slots = [self._slots[c] for c in idl]
+            return self._fns.gather(self.buf, self.ibuf, self._ids(slots))
+        f, i = self._host_rows(idl)
+        return self._fns.from_rows(f, i)
+
+    def gather_one(self, client_id: int):
+        c = int(client_id)
+        self._ensure_hot([c])
+        return self._fns.gather_one(self.buf, self.ibuf, self._slots[c])
+
+    def _scatter_row(self, ids: Sequence[int], frow, irow) -> None:
+        """Write one flat global row into every ``ids`` slot, whichever
+        tier each row lives in (hot rows in one device program, cold
+        rows write-around straight to the cold tier — no promotion)."""
+        uniq = list(dict.fromkeys(int(c) for c in ids))
+        hot = [c for c in uniq if c in self._slots]
+        if hot:
+            self.buf, self.ibuf = self._fns.scatter(
+                self.buf, self.ibuf,
+                self._ids([self._slots[c] for c in hot]), frow, irow)
+            for c in hot:
+                self._slots.move_to_end(c)
+                self._dirty.add(c)
+        missing = [c for c in uniq if c not in self._slots]
+        if missing:
+            self.cold.write(missing, np.asarray(frow, np.float32),
+                            np.asarray(irow, np.int32))
+
+    def scatter(self, ids: Sequence[int], flat_global):
+        frow, irow = self._rows_of(flat_global)
+        self._scatter_row(ids, frow, irow)
+
+    def scatter_params(self, ids: Sequence[int], params):
+        frow, irow = self._fns.flatten(params)
+        self._scatter_row(ids, frow, irow)
+        return self._row_value(frow, irow)
+
+    # ``merge_scatter`` is inherited unchanged: the dense store
+    # dispatches the standalone merge program (dict-path-identical by
+    # construction, independent of buffer height) and lands the new
+    # global row through ``scatter_params`` -> ``_scatter_row``, which
+    # is residency-aware (hot slots in one device program, cold ids
+    # write-around to the cold tier).

@@ -167,6 +167,20 @@ def _programs(treedef, entries, donate: bool):
     def gather_one_impl(fbuf, ibuf, i):
         return _from_rows(fbuf[i], ibuf[i], treedef, entries)
 
+    def from_rows_impl(frows, irows):
+        # stacked pytree straight from materialized row blocks — the
+        # tiered store's mixed hot/cold gather (rows assembled on host)
+        return _from_stacked_rows(frows, irows, treedef, entries)
+
+    def read_rows_impl(fbuf, ibuf, ids):
+        # raw row blocks (write-behind demotion reads these before the
+        # slots are reused); never donated — it only reads
+        return fbuf[ids], ibuf[ids]
+
+    def write_rows_impl(fbuf, ibuf, ids, frows, irows):
+        # per-row block write (host->device promotion)
+        return fbuf.at[ids].set(frows), ibuf.at[ids].set(irows)
+
     def scatter_impl(fbuf, ibuf, ids, frow, irow):
         return fbuf.at[ids].set(frow), ibuf.at[ids].set(irow)
 
@@ -186,29 +200,13 @@ def _programs(treedef, entries, donate: bool):
         unflatten=jax.jit(unflatten_impl),
         gather=jax.jit(gather_impl),
         gather_one=jax.jit(gather_one_impl),
+        from_rows=jax.jit(from_rows_impl),
+        read_rows=jax.jit(read_rows_impl),
+        write_rows=jax.jit(write_rows_impl, **dk),
         scatter=jax.jit(scatter_impl, **dk),
         scatter_params=jax.jit(scatter_params_impl, **dk),
         init=jax.jit(init_impl, static_argnums=(1,)),
     )
-
-
-@functools.lru_cache(maxsize=None)
-def _merge_programs(treedef, entries, donate: bool):
-    """The fused jnp merge+scatter program, cached separately from the
-    base store programs."""
-
-    def merge_scatter_impl(fbuf, ibuf, ids, stacked, coef, params):
-        # the exact folded-merge program of the dict-of-pytrees path
-        # (staleness_weighted_merge), fused with the flatten of the new
-        # global row and the snapshot scatter — padded rows carry coef
-        # 0 and are masked to exact no-ops.
-        new_params = _merge_folded_jnp(params, stacked, coef)
-        frow, irow = _to_rows(new_params, entries)
-        return (fbuf.at[ids].set(frow), ibuf.at[ids].set(irow),
-                frow, irow, new_params)
-
-    dk = dict(donate_argnums=(0, 1)) if donate else {}
-    return jax.jit(merge_scatter_impl, **dk)
 
 
 class ClientStateStore:
@@ -226,12 +224,10 @@ class ClientStateStore:
         self.n = int(n_clients)
         self.mesh = mesh if (mesh is not None and int(mesh.size) > 1) \
             else None
-        if self.mesh is not None:
-            from repro.distributed.plan import ClientShardingPlan
-            self.rows = ClientShardingPlan.for_cohort(
-                self.n, self.mesh).padded_n
-        else:
-            self.rows = self.n
+        self.rows = self._buffer_rows()
+        # dense: every client's authoritative row lives on device.  The
+        # tiered subclass overrides this tag ("tiered-host"/"tiered-disk").
+        self.residency = "dense"
         # XLA CPU does not implement buffer donation — donating there
         # only emits warnings.  Donate on real accelerator backends.
         self._donate = jax.default_backend() != "cpu"
@@ -245,6 +241,14 @@ class ClientStateStore:
             fbuf = jax.device_put(fbuf, rows_sharded)
             ibuf = jax.device_put(ibuf, rows_sharded)
         self.buf, self.ibuf = fbuf, ibuf
+
+    def _buffer_rows(self) -> int:
+        """Height of the device-resident buffer (subclass hook: the
+        tiered store allocates only its hot capacity)."""
+        if self.mesh is not None:
+            from repro.distributed.plan import ClientShardingPlan
+            return ClientShardingPlan.for_cohort(self.n, self.mesh).padded_n
+        return self.n
 
     @staticmethod
     def _ids(ids) -> jnp.ndarray:
@@ -317,12 +321,12 @@ class ClientStateStore:
             self.buf, self.ibuf, self._ids(ids), params)
         return self._row_value(frow, irow)
 
-    # -- fused merge + scatter (the async round-step tail) --------------
+    # -- merge + scatter (the async round-step tail) --------------------
     def merge_scatter(self, ids: Sequence[int], stacked_updates, coef,
                       params, *, use_kernel: bool = False,
                       interpret=None):
         """Fold one drained window into the global model and re-snapshot
-        the merged clients, as ONE donated program.
+        the merged clients.
 
         ``stacked_updates``: trained cohort pytree, leaves
         (len(ids), ...).  ``coef``: (len(ids)+1,) telescoped merge
@@ -334,22 +338,24 @@ class ClientStateStore:
         compiled on TPU) — the same ``fedagg_fold_pytree`` program the
         dict path's ``staleness_weighted_merge(use_kernel=True)`` runs.
         Returns ``(new_params, new_global_flat)``.
+
+        The merge ALWAYS dispatches the standalone jitted program the
+        dict reference runs (``_merge_folded_jnp`` or the fedagg
+        kernel), then scatters through the fused flatten+scatter
+        program.  Tracing the merge INSIDE the donated scatter program
+        would let XLA re-fuse the reduction per buffer shape (FMA
+        contraction differs across compilation units — and across
+        buffer HEIGHTS, so a tiered/sharded store could never match
+        the dense one).  Two dispatches buy histories that are
+        bit-identical to the dict path and across residency layouts by
+        construction.
         """
         coef = jnp.asarray(np.asarray(coef, np.float32))
         if use_kernel:
-            # dispatch the SAME standalone jitted kernel program the
-            # dict reference runs, then scatter through the fused
-            # flatten+scatter program.  Tracing the kernel INSIDE the
-            # donated scatter program would let XLA re-fuse the
-            # reduction (FMA contraction) and drift a ulp from the
-            # reference — two dispatches buy bit-identical histories.
             interp = on_cpu() if interpret is None else bool(interpret)
             new_params = fedagg_fold_pytree(params, stacked_updates,
                                             coef, interpret=interp)
-            row = self.scatter_params(ids, new_params)
-            return new_params, row
-        fns = _merge_programs(self.treedef, self.entries, self._donate)
-        self.buf, self.ibuf, frow, irow, new_params = fns(
-            self.buf, self.ibuf, self._ids(ids), stacked_updates, coef,
-            params)
-        return new_params, self._row_value(frow, irow)
+        else:
+            new_params = _merge_folded_jnp(params, stacked_updates, coef)
+        row = self.scatter_params(ids, new_params)
+        return new_params, row

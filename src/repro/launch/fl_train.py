@@ -52,6 +52,17 @@ def main(argv=None):
                          "a dict of pytrees instead of the "
                          "device-resident flat ClientStateStore "
                          "(reference path, bit-identical histories)")
+    ap.add_argument("--hot-rows", type=int, default=0,
+                    help="async methods only: tiered client-state "
+                         "residency — keep only this many client rows "
+                         "on device (hot tier) and the rest in pinned "
+                         "host memory, with EventQueue-driven prefetch "
+                         "(0 = dense, every row on device; histories "
+                         "are bit-identical at any capacity)")
+    ap.add_argument("--cold-dir", default=None,
+                    help="with --hot-rows: spill the cold tier to "
+                         "ckpt-chunk files under this directory "
+                         "instead of pinned host memory")
     ap.add_argument("--mesh-clients", type=int, default=0,
                     help="shard cohorts over a 1-D client mesh of N "
                          "devices (0 = single-device engine; on CPU "
@@ -79,6 +90,10 @@ def main(argv=None):
     if args.no_store and args.method in ("fedasync", "fedbuff",
                                          "feddct_async"):
         kw["use_store"] = False
+    if args.hot_rows > 0 and args.method in ("fedasync", "fedbuff",
+                                             "feddct_async"):
+        kw["store_capacity"] = args.hot_rows
+        kw["store_cold_dir"] = args.cold_dir
     hist = run_method(args.method, trainer, net, fl, **kw)
     if hist.accuracy:
         print(f"[fl_train] {args.method} on {args.arch}: "

@@ -49,7 +49,7 @@ from repro.runtime.events import ClientEvent, EventQueue
 
 
 def _resolve_store(params, n_clients: int, mesh, use_store,
-                   window_active: bool):
+                   window_active: bool, capacity=None, cold_dir=None):
     """-> ``(ClientStateStore or None, reason)`` applying the store
     policy in one place.  ``None`` store means the dict-of-pytrees
     path; ``reason`` is a machine-checkable tag recorded on the
@@ -68,9 +68,24 @@ def _resolve_store(params, n_clients: int, mesh, use_store,
       there is no configuration left to degrade on.  A template the
       store genuinely cannot hold exactly (64-bit leaves) raises
       ``TypeError`` loudly instead of silently changing paths.
+
+    ``capacity`` (client rows the device keeps hot) selects tiered
+    residency: the store becomes a ``TieredClientStateStore`` whose
+    cold tier is pinned host memory, or ckpt-chunk disk spill when
+    ``cold_dir`` is set.  Asking for a capacity implies wanting the
+    store (reason ``"auto-tiered"``) — except under an explicit
+    ``use_store=False``, which still wins.  Histories are bit-identical
+    across all residency layouts, so this only moves memory.
     """
     if use_store is False:
         return None, "forced-off"
+    if capacity is not None:
+        from repro.core.residency import TieredClientStateStore
+        reason = "forced-on" if use_store is True else "auto-tiered"
+        return TieredClientStateStore(
+            params, n_clients, capacity=capacity,
+            cold="disk" if cold_dir else "host", cold_dir=cold_dir,
+            mesh=mesh), reason
     if use_store is None and not window_active:
         return None, "window0-sequential"
     reason = "forced-on" if use_store is True else "auto-windowed"
@@ -168,7 +183,8 @@ class AsyncRunner:
                  method: str = "fedasync", engine: str = "batched",
                  use_kernel_agg: bool = False, window: int = 0,
                  window_secs: float = 0.0, eval_every: int = 5,
-                 verbose: bool = False, mesh=None, use_store=None):
+                 verbose: bool = False, mesh=None, use_store=None,
+                 store_capacity=None, store_cold_dir=None):
         self.trainer = trainer
         self.network = network
         self.fl = fl
@@ -187,9 +203,13 @@ class AsyncRunner:
         # histories, slower server step); True = force (window=0
         # included).  Resolved by ``_resolve_store`` at run().
         self.use_store = use_store
+        # tiered residency: hot device rows (None = dense, every row on
+        # device) and the optional disk cold tier for the demoted rest.
+        self.store_capacity = store_capacity
+        self.store_cold_dir = store_cold_dir
         # resolved snapshot-path tag ("auto-windowed" / "forced-on" /
-        # "forced-off" / "window0-sequential"), set by run() and also
-        # recorded on the RunHistory meta.
+        # "forced-off" / "window0-sequential" / "auto-tiered"), set by
+        # run() and also recorded on the RunHistory meta.
         self.store_reason = None
         self.buffer = AggregationBuffer(window, window_secs)
         self.eval_every = max(int(eval_every), 1)
@@ -207,7 +227,8 @@ class AsyncRunner:
         store, self.store_reason = _resolve_store(
             params, fl.n_clients, self.mesh, self.use_store,
             window_active=(self.buffer.window > 0
-                           or self.buffer.window_secs > 0))
+                           or self.buffer.window_secs > 0),
+            capacity=self.store_capacity, cold_dir=self.store_cold_dir)
         snapshots: Dict[int, object] = {}
         if store is None:
             snapshots = {c: params for c in range(fl.n_clients)}
@@ -220,6 +241,9 @@ class AsyncRunner:
                   "store": store is not None,
                   "store_path": "store" if store is not None else "dict",
                   "store_reason": self.store_reason,
+                  "residency": (store.residency if store is not None
+                                else "dict"),
+                  "hot_rows": store.rows if store is not None else 0,
                   "kernel_agg": self.use_kernel_agg})
         first = net.delays(np.arange(fl.n_clients), 0)
         q = EventQueue([ClientEvent(float(t), c, 0, 0, cost=float(t))
@@ -235,6 +259,17 @@ class AsyncRunner:
             # windows close at anchor + window_secs (the server must wait
             # out the deadline — it cannot know nothing else is coming)
             clock = self.buffer.close_time(batch, limit=limit)
+            if hasattr(store, "prefetch") and q and limit > len(batch):
+                # EventQueue lookahead: the finish times of the NEXT
+                # window are already in the heap, so its rows stage
+                # host->device while the current cohort trains.  The
+                # in-flight batch is pinned against eviction; the peek
+                # never perturbs pop order, and a stale hint only costs
+                # swaps (gather/merge re-stage anything missing).
+                upcoming = self.buffer.peek_window(
+                    q, limit=limit - len(batch))
+                store.prefetch([e.client for e in upcoming],
+                               keep=[e.client for e in batch])
             if store is not None:
                 # the merged clients' snapshot rows are re-scattered
                 # inside the fused window step itself
@@ -278,7 +313,8 @@ class AsyncRunner:
 def run_feddct_async(trainer, network, fl: FLConfig, *,
                      engine: str = "batched", use_kernel_agg: bool = False,
                      verbose: bool = False, eval_every: int = 1,
-                     mesh=None, use_store=None) -> RunHistory:
+                     mesh=None, use_store=None, store_capacity=None,
+                     store_cold_dir=None) -> RunHistory:
     """Semi-async FedDCT: tier timeouts become aggregation windows.
 
     Per round: dynamic tiering + CSTT selection exactly as the sync
@@ -299,7 +335,9 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     # buffer) by default — tier windows always batch — with the
     # dict-of-pytrees path as the A/B reference (use_store=False)
     store, store_reason = _resolve_store(params, fl.n_clients, mesh,
-                                         use_store, window_active=True)
+                                         use_store, window_active=True,
+                                         capacity=store_capacity,
+                                         cold_dir=store_cold_dir)
     hist = RunHistory(method="feddct_async", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
@@ -310,6 +348,10 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                             "store_path": ("store" if store is not None
                                            else "dict"),
                             "store_reason": store_reason,
+                            "residency": (store.residency
+                                          if store is not None else "dict"),
+                            "hot_rows": (store.rows if store is not None
+                                         else 0),
                             "kernel_agg": use_kernel_agg})
     clock = 0.0
 
@@ -361,6 +403,12 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                                        for k in used)
             n_sel = len(selected)
 
+        if hasattr(store, "prefetch") and q:
+            # the tier timeout is known BEFORE the window opens: every
+            # completion the coming drain will pop can stage
+            # host->device now, while selection's device work retires.
+            upcoming = AggregationBuffer.peek_until(q, deadline)
+            store.prefetch([e.client for e in upcoming])
         batch = AggregationBuffer.drain_until(q, deadline)
         if batch:
             if store is not None:

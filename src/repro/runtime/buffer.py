@@ -57,6 +57,24 @@ class AggregationBuffer:
             batch.append(queue.pop())
         return batch
 
+    def peek_window(self, queue: EventQueue,
+                    limit: Optional[int] = None) -> List[ClientEvent]:
+        """The events the NEXT ``drain`` would return, without popping
+        — the residency prefetcher's lookahead.  Mirrors ``drain``'s
+        anchor/cap/deadline logic over ``peek_n``'s sorted prefix, so
+        the result matches the coming drain exactly (events pushed in
+        between can only make the real drain a sub-case: gather/merge
+        re-stage anything the prefetch missed)."""
+        if not queue:
+            return []
+        cap = self._cap(limit)
+        k = len(queue) if math.isinf(cap) else min(int(cap), len(queue))
+        events = queue.peek_n(k)
+        if self.window_secs > 0:
+            deadline = events[0].finish + self.window_secs
+            events = [e for e in events if e.finish <= deadline]
+        return events
+
     def close_time(self, batch: List[ClientEvent],
                    limit: Optional[int] = None) -> float:
         """Virtual time at which the server actually closes a drained
@@ -84,3 +102,15 @@ class AggregationBuffer:
         while queue and len(batch) < cap and queue.peek().finish <= deadline:
             batch.append(queue.pop())
         return batch
+
+    @staticmethod
+    def peek_until(queue: EventQueue, deadline: float,
+                   limit: Optional[int] = None) -> List[ClientEvent]:
+        """The events the next ``drain_until(deadline)`` would return,
+        without popping — lookahead for the semi-async FedDCT loop
+        (the tier timeout is known BEFORE the window opens, so the
+        whole coming window can prefetch)."""
+        if not queue:
+            return []
+        k = len(queue) if limit is None else min(int(limit), len(queue))
+        return [e for e in queue.peek_n(k) if e.finish <= deadline]

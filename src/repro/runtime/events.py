@@ -51,6 +51,16 @@ class EventQueue:
     def peek(self) -> ClientEvent:
         return self._heap[0]
 
+    def peek_n(self, k: int) -> List[ClientEvent]:
+        """The ``k`` earliest pending events in pop order, WITHOUT
+        popping — the residency prefetcher's lookahead.  ``heapq.
+        nsmallest`` sorts on the same ``(finish, client)`` total order
+        as ``pop``, so the returned prefix matches the next ``k`` pops
+        exactly and the heap is untouched."""
+        if k <= 0:
+            return []
+        return heapq.nsmallest(k, self._heap)
+
     def __len__(self) -> int:
         return len(self._heap)
 

@@ -34,13 +34,17 @@ def test_feddct_learns_on_cnn():
 
 
 @pytest.mark.slow
-def test_fl_train_exactly_reproducible_across_processes(tmp_path):
+@pytest.mark.parametrize("extra", [(), ("--hot-rows", "2")],
+                         ids=["dense-store", "tiered-residency"])
+def test_fl_train_exactly_reproducible_across_processes(tmp_path, extra):
     """Regression for the cross-process nondeterminism observed at the
     PR 4 seed state: same ``fl_train.py`` flags in two FRESH processes
     (different PYTHONHASHSEED, the entropy source the bug rode on) must
     write byte-identical RunHistory JSON.  In-process A/B was always
     bitwise — only a new interpreter exposed the salted ``hash(name)``
-    in the dataset seed."""
+    in the dataset seed.  The tiered-residency arm runs the same gate
+    with a hot tier smaller than the cohort (capacity 2 < 4 clients),
+    so eviction and host round-trips must also be hash-seed-proof."""
     repo = os.path.join(os.path.dirname(__file__), "..")
     outs = []
     for hashseed in ("1", "2"):
@@ -52,7 +56,7 @@ def test_fl_train_exactly_reproducible_across_processes(tmp_path):
             [sys.executable, "-m", "repro.launch.fl_train",
              "--arch", "cnn-mnist", "--method", "fedbuff",
              "--rounds", "2", "--clients", "4", "--tau", "2",
-             "--window", "2", "--seed", "0", "--out", out],
+             "--window", "2", "--seed", "0", "--out", out, *extra],
             env=env, cwd=repo, capture_output=True, text=True,
             timeout=900)
         assert r.returncode == 0, r.stderr[-2000:]

@@ -1,0 +1,349 @@
+"""Tiered client-state residency (``TieredClientStateStore``): the
+hot-device / cold-host split behind the dense store's API.
+
+The load-bearing gate is randomized: seeded interleavings of
+``gather`` / ``scatter`` / ``merge_scatter`` (kernel and non-kernel,
+float-only and int-sidecar templates) over capacities {N, N/2, 1} must
+stay BIT-identical to a dense store replaying the same ops — residency
+is pure data movement, never arithmetic.  On top of that: LRU
+eviction + write-behind accounting, prefetch pinning, the disk cold
+tier's spill/persistence, and runner-level history parity for
+fedasync / fedbuff / feddct_async at capacity < N.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import FLConfig
+from repro.core.aggregation import staleness_merge_coefficients
+from repro.core.baselines import run_fedasync, run_fedbuff
+from repro.core.residency import (DiskColdTier, HostColdTier,
+                                  TieredClientStateStore)
+from repro.core.state import ClientStateStore
+from repro.fl.network import WirelessNetwork
+from repro.fl.testing import SyntheticCohortTrainer
+from repro.runtime.async_loop import run_feddct_async
+
+from test_state import (FakeLoopTrainer, IntLeafTrainer, _hist_equal,
+                        _int_template, _net, _stack, _template,
+                        _tree_equal)
+
+N = 6
+
+
+def _rand_tree(template, seed):
+    """A random tree with ``template``'s structure/dtypes (int leaves
+    get fresh in-range values, floats fresh normals)."""
+    rng = np.random.default_rng(seed)
+
+    def leaf(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jnp.asarray(
+                rng.normal(size=l.shape).astype(np.float32)).astype(l.dtype)
+        if l.dtype == jnp.bool_:
+            return jnp.asarray(rng.integers(0, 2, size=l.shape).astype(bool))
+        info = jnp.iinfo(l.dtype)
+        return jnp.asarray(
+            rng.integers(info.min, int(info.max) + 1, size=l.shape),
+            l.dtype)
+
+    return jax.tree_util.tree_map(leaf, template)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole gate: randomized op interleavings, bitwise vs dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp-merge", "kernel-merge"])
+@pytest.mark.parametrize("template_fn", [_template, _int_template],
+                         ids=["float-tree", "int-sidecar-tree"])
+@pytest.mark.parametrize("capacity", [N, N // 2, 1])
+def test_random_interleaving_bit_identical_to_dense(capacity, template_fn,
+                                                    use_kernel):
+    tpl = template_fn(0)
+    dense = ClientStateStore(tpl, N)
+    tiered = TieredClientStateStore(tpl, N, capacity=capacity)
+    assert tiered.rows == capacity
+    assert dense.p == tiered.p and dense.pi == tiered.pi
+    rng = np.random.default_rng(100 + capacity)
+
+    for step in range(40):
+        op = rng.integers(0, 4)
+        if op == 0:
+            # gather with duplicates (the engine's pow2 pad convention)
+            ids = rng.integers(0, N, size=rng.integers(1, 7)).tolist()
+            _tree_equal(dense.gather(ids), tiered.gather(ids))
+        elif op == 1:
+            ids = rng.choice(N, size=rng.integers(1, 4),
+                             replace=False).tolist()
+            t = _rand_tree(tpl, int(rng.integers(1 << 20)))
+            ra = dense.scatter_params(ids, t)
+            rb = tiered.scatter_params(ids, t)
+            _tree_equal(jax.tree_util.tree_map(np.asarray, ra),
+                        jax.tree_util.tree_map(np.asarray, rb))
+        elif op == 2:
+            ids = rng.choice(N, size=rng.integers(1, 3),
+                             replace=False).tolist()
+            flat = dense.flatten(_rand_tree(tpl, int(rng.integers(1 << 20))))
+            dense.scatter(ids, flat)
+            tiered.scatter(ids, flat)
+        else:
+            k = int(rng.integers(1, 6))
+            ids = rng.choice(N, size=k, replace=False).tolist()
+            stacked = dense.gather(ids)        # equal stores -> equal rows
+            coef = staleness_merge_coefficients(
+                rng.random(k).astype(np.float32))
+            g = _rand_tree(tpl, int(rng.integers(1 << 20)))
+            na, _ = dense.merge_scatter(ids, stacked, coef, g,
+                                        use_kernel=use_kernel)
+            nb, _ = tiered.merge_scatter(ids, tiered.gather(ids), coef, g,
+                                         use_kernel=use_kernel)
+            _tree_equal(na, nb)
+        c = int(rng.integers(0, N))
+        _tree_equal(dense.gather_one(c), tiered.gather_one(c))
+
+    # final full-population sweep: every row identical in both layouts
+    _tree_equal(dense.gather(list(range(N))),
+                tiered.gather(list(range(N))))
+    if capacity < N:
+        assert tiered.n_promoted > 0           # residency actually moved
+
+
+def test_padded_zero_coef_merge_is_exact_across_tiers():
+    """The engine's repeat-last padded merge (coef 0 rows) over a
+    capacity-1 store: pads and spills together must still be no-ops."""
+    g = _template(10)
+    trees = [_template(30 + i) for i in range(3)]
+    coef = staleness_merge_coefficients([0.5, 0.25, 0.7])
+    s1 = ClientStateStore(g, N)
+    p1, _ = s1.merge_scatter([1, 2, 3], _stack(trees), coef, g)
+    s2 = TieredClientStateStore(g, N, capacity=1)
+    padded = _stack(trees + [trees[-1]])
+    coef_pad = np.concatenate([coef, np.zeros(1, np.float32)])
+    p2, _ = s2.merge_scatter([1, 2, 3, 3], padded, coef_pad, g)
+    _tree_equal(p1, p2)
+    for c in (1, 2, 3):
+        _tree_equal(s2.gather_one(c), p1)
+    _tree_equal(s2.gather_one(0), g)
+
+
+# ---------------------------------------------------------------------------
+# residency mechanics: LRU, write-behind, prefetch pinning
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_and_write_behind_only_dirty_rows():
+    tpl = _template(0)
+    store = TieredClientStateStore(tpl, N, capacity=2)
+    store.gather([0, 1])                       # promote 0, 1 (clean)
+    assert store.hot_clients == (0, 1)
+    store.gather_one(0)                        # LRU touch: 1 is now oldest
+    assert store.hot_clients == (1, 0)
+    store.gather_one(2)                        # evicts 1 — clean, no write
+    assert store.hot_clients == (0, 2)
+    assert len(store.cold) == 0                # write-behind skipped
+    t = _template(99)
+    store.scatter_params([2], t)               # dirties 2 while hot
+    store.gather([3, 4])                       # evicts 0 (clean), 2 (dirty)
+    assert len(store.cold) == 1                # only the dirty row demoted
+    assert store.n_demoted == 1
+    _tree_equal(store.gather_one(2), t)        # …and reads back exactly
+
+
+def test_prefetch_is_partial_and_respects_pins():
+    tpl = _template(1)
+    store = TieredClientStateStore(tpl, N, capacity=2)
+    promoted = store.prefetch([3, 4, 5])       # truncated to capacity
+    assert promoted == [3, 4]
+    assert store.hot_clients == (3, 4)
+    # every slot pinned: prefetch must stop quietly, not evict or raise
+    assert store.prefetch([0, 1], keep=[3, 4]) == []
+    assert store.hot_clients == (3, 4)
+    # unpinned: prefetch evicts LRU as usual
+    assert store.prefetch([0], keep=[4]) == [0]
+    assert 0 in store.hot_clients and 3 not in store.hot_clients
+
+
+def test_prefetch_is_only_a_hint_values_never_change():
+    """A deliberately WRONG prefetch (staging clients the next window
+    will not touch) must not change any value the store serves."""
+    tpl = _int_template(2)
+    dense = ClientStateStore(tpl, N)
+    tiered = TieredClientStateStore(tpl, N, capacity=2)
+    t = _rand_tree(tpl, 7)
+    dense.scatter_params([0, 5], t)
+    tiered.scatter_params([0, 5], t)
+    tiered.prefetch([3, 4])                    # stale lookahead
+    _tree_equal(dense.gather([0, 5, 3]), tiered.gather([0, 5, 3]))
+
+
+def test_ensure_window_batches_promotion_for_looped_gathers():
+    tpl = _template(3)
+    store = TieredClientStateStore(tpl, N, capacity=3)
+    store.ensure_window([2, 4, 2, 5])          # duplicates collapse
+    assert set(store.hot_clients) == {2, 4, 5}
+    promoted_before = store.n_promoted
+    for c in (2, 4, 5):
+        store.gather_one(c)                    # all hot: no further moves
+    assert store.n_promoted == promoted_before
+    store.ensure_window(list(range(N)))        # wider than hot: a no-op
+    assert set(store.hot_clients) == {2, 4, 5}
+
+
+# ---------------------------------------------------------------------------
+# cold tiers
+# ---------------------------------------------------------------------------
+
+def test_host_cold_tier_defaults_and_broadcast():
+    f0 = np.arange(4, dtype=np.float32)
+    i0 = np.asarray([7], np.int32)
+    cold = HostColdTier(f0, i0)
+    f, i = cold.read([0, 3])                   # untouched -> template row
+    np.testing.assert_array_equal(f, np.stack([f0, f0]))
+    np.testing.assert_array_equal(i, np.stack([i0, i0]))
+    cold.write([1, 2], f0 * 2, i0 * 2)         # 1-D broadcast form
+    f, i = cold.read([1, 2, 0])
+    np.testing.assert_array_equal(f[0], f0 * 2)
+    np.testing.assert_array_equal(f[1], f0 * 2)
+    np.testing.assert_array_equal(f[2], f0)
+    assert len(cold) == 2
+
+
+def test_disk_cold_tier_spills_and_persists(tmp_path):
+    rng = np.random.default_rng(11)
+    f0 = np.zeros(5, np.float32)
+    i0 = np.zeros(2, np.int32)
+    rows = {c: (rng.normal(size=5).astype(np.float32),
+                rng.integers(0, 99, size=2).astype(np.int32))
+            for c in range(7)}
+    cold = DiskColdTier(str(tmp_path), 7, f0, i0, chunk=2, cache_chunks=2)
+    for c, (f, i) in rows.items():             # > cache: chunks spill
+        cold.write([c], f, i)
+    cold.flush()
+    assert len(list(tmp_path.glob("ckpt_*.npz"))) == 4  # ceil(7/2) chunks
+    # a fresh tier over the same directory reads every row back exactly
+    cold2 = DiskColdTier(str(tmp_path), 7, f0, i0, chunk=2)
+    f, i = cold2.read(list(range(7)))
+    for c in range(7):
+        np.testing.assert_array_equal(f[c], rows[c][0])
+        np.testing.assert_array_equal(i[c], rows[c][1])
+
+
+def test_disk_tier_store_bit_identical_to_dense(tmp_path):
+    tpl = _int_template(4)
+    dense = ClientStateStore(tpl, N)
+    tiered = TieredClientStateStore(tpl, N, capacity=2, cold="disk",
+                                    cold_dir=str(tmp_path), chunk=2)
+    assert tiered.residency == "tiered-disk"
+    rng = np.random.default_rng(5)
+    for step in range(12):
+        ids = rng.choice(N, size=rng.integers(1, 4), replace=False).tolist()
+        t = _rand_tree(tpl, step)
+        dense.scatter_params(ids, t)
+        tiered.scatter_params(ids, t)
+        c = int(rng.integers(0, N))
+        _tree_equal(dense.gather_one(c), tiered.gather_one(c))
+    _tree_equal(dense.gather(list(range(N))),
+                tiered.gather(list(range(N))))
+
+
+# ---------------------------------------------------------------------------
+# constructor contract
+# ---------------------------------------------------------------------------
+
+def test_tiered_store_rejects_bad_configs(tmp_path):
+    from types import SimpleNamespace
+    tpl = _template(0)
+    with pytest.raises(ValueError):
+        TieredClientStateStore(tpl, N, capacity=0)
+    with pytest.raises(ValueError):
+        TieredClientStateStore(tpl, N, capacity=2, cold="disk")  # no dir
+    with pytest.raises(ValueError):
+        TieredClientStateStore(tpl, N, capacity=2, cold="tape")
+    with pytest.raises(ValueError):
+        # tiered residency manages ONE device; sharding is the dense
+        # store's mesh= job
+        TieredClientStateStore(tpl, N, capacity=2,
+                               mesh=SimpleNamespace(size=2))
+    # capacity above N clamps to N (degenerate dense layout, still tiered API)
+    s = TieredClientStateStore(tpl, 3, capacity=64)
+    assert s.capacity == 3 and s.rows == 3
+
+
+# ---------------------------------------------------------------------------
+# runner-level history parity at capacity < N
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp-merge", "kernel-merge"])
+def test_fedasync_tiered_history_identical_to_dense(use_kernel):
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=4, seed=3)
+    hd = run_fedasync(SyntheticCohortTrainer(), _net(fl), fl, window=3,
+                      eval_every=4, use_store=True,
+                      use_kernel_agg=use_kernel)
+    ht = run_fedasync(SyntheticCohortTrainer(), _net(fl), fl, window=3,
+                      eval_every=4, store_capacity=3,
+                      use_kernel_agg=use_kernel)
+    _hist_equal(hd, ht)
+    assert ht.meta["residency"] == "tiered-host"
+    assert ht.meta["hot_rows"] == 3
+    assert ht.meta["store_reason"] == "auto-tiered"
+    assert hd.meta["residency"] == "dense"
+    assert hd.meta["hot_rows"] == 8
+
+
+@pytest.mark.parametrize("trainer_cls", [IntLeafTrainer,
+                                         SyntheticCohortTrainer])
+def test_fedbuff_capacity_one_history_identical_to_dense(trainer_cls):
+    """Capacity 1 forces spill-path gathers and merges on every window
+    (window=2 > hot rows) — histories still bit-identical.  The
+    IntLeafTrainer variant rides the looped gather_one path with the
+    int32 sidecar in play."""
+    fl = FLConfig(n_clients=6, tau=2, rounds=4, seed=2)
+    hd = run_fedbuff(trainer_cls(), _net(fl), fl, window=2, eval_every=8,
+                     use_store=True)
+    ht = run_fedbuff(trainer_cls(), _net(fl), fl, window=2, eval_every=8,
+                     store_capacity=1)
+    _hist_equal(hd, ht)
+    assert ht.meta["hot_rows"] == 1
+
+
+def test_feddct_async_tiered_history_identical_to_dense(tmp_path):
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                  seed=5, beta=1.1)
+    hd = run_feddct_async(SyntheticCohortTrainer(), _net(fl), fl,
+                          use_store=True)
+    ht = run_feddct_async(SyntheticCohortTrainer(), _net(fl), fl,
+                          store_capacity=2)
+    _hist_equal(hd, ht)
+    assert ht.meta["residency"] == "tiered-host"
+    # and the disk cold tier produces the same history again
+    hk = run_feddct_async(SyntheticCohortTrainer(), _net(fl), fl,
+                          store_capacity=2, store_cold_dir=str(tmp_path))
+    _hist_equal(hd, hk)
+    assert hk.meta["residency"] == "tiered-disk"
+
+
+def test_tiered_history_identical_to_dict_reference():
+    """Transitivity spot-check straight against the dict-of-pytrees
+    reference (the PR 4 gate's other side)."""
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=4, seed=3)
+    hdict = run_fedasync(FakeLoopTrainer(), _net(fl), fl, window=3,
+                         eval_every=4, use_store=False)
+    ht = run_fedasync(FakeLoopTrainer(), _net(fl), fl, window=3,
+                      eval_every=4, store_capacity=2)
+    _hist_equal(hdict, ht)
+    assert hdict.meta["residency"] == "dict"
+    assert hdict.meta["hot_rows"] == 0
+
+
+def test_use_store_false_wins_over_capacity():
+    """Explicit dict-reference requests beat the capacity hint — the
+    A/B reference arm must stay a true dict path."""
+    fl = FLConfig(n_clients=6, tau=2, rounds=2, seed=6)
+    h = run_fedbuff(SyntheticCohortTrainer(), _net(fl), fl, window=2,
+                    eval_every=8, use_store=False, store_capacity=2)
+    assert h.meta["store_path"] == "dict"
+    assert h.meta["store_reason"] == "forced-off"

@@ -137,6 +137,86 @@ def test_buffer_close_time_semantics():
 
 
 # ---------------------------------------------------------------------------
+# lookahead peeks (the residency prefetcher's contract)
+# ---------------------------------------------------------------------------
+
+def test_peek_n_matches_pop_order_and_never_perturbs():
+    times = [5.0, 2.0, 9.0, 2.0, 7.0, 2.0]     # triple tie at 2.0
+    q = _queue(times)
+    snap = sorted((e.finish, e.client) for e in q._heap)
+    for k in (0, -3, 1, 3, len(times), len(times) + 5):
+        got = q.peek_n(k)
+        assert len(got) == max(0, min(k, len(times)))
+        assert sorted((e.finish, e.client) for e in q._heap) == snap
+    # the peeked prefix IS the next-k pops, ties broken on client id
+    want = [q.pop() for _ in range(4)]
+    q2 = _queue(times)
+    assert q2.peek_n(4) == want
+    assert [e.client for e in q2.peek_n(4)][:3] == [1, 3, 5]
+
+
+@pytest.mark.parametrize("window,window_secs,limit", [
+    (0, 0.0, None), (3, 0.0, None), (0, 6.0, None), (2, 6.0, None),
+    (3, 0.0, 2), (0, 50.0, 2)])
+def test_peek_window_equals_the_coming_drain(window, window_secs, limit):
+    times = [1.0, 5.0, 6.9, 1.0, 20.0, 6.9]
+    buf = AggregationBuffer(window, window_secs)
+    peeked = buf.peek_window(_queue(times), limit=limit)
+    drained = buf.drain(_queue(times), limit=limit)
+    assert peeked == drained
+    # and peeking really popped nothing
+    q = _queue(times)
+    buf.peek_window(q, limit=limit)
+    assert len(q) == len(times)
+
+
+def test_peek_window_and_drain_empty_queue():
+    buf = AggregationBuffer(window=3)
+    q = EventQueue()
+    assert buf.peek_window(q) == []
+    assert buf.drain(q) == []
+
+
+def test_drain_tied_finish_times_pop_in_client_order():
+    q = _queue([4.0, 4.0, 4.0, 4.0])
+    buf = AggregationBuffer(window=4)
+    assert [e.client for e in buf.drain(q)] == [0, 1, 2, 3]
+
+
+def test_drain_until_exact_window_boundary_is_inclusive():
+    # finish == deadline drains; the next event (one ulp later) stays
+    q = _queue([1.0, 3.0, np.nextafter(3.0, 4.0), 5.0])
+    got = AggregationBuffer.drain_until(q, deadline=3.0)
+    assert [e.client for e in got] == [0, 1]
+    assert len(q) == 2
+    # empty drain at a deadline before every completion
+    assert AggregationBuffer.drain_until(q, deadline=0.5) == []
+    assert len(q) == 2
+
+
+def test_time_window_exact_boundary_is_inclusive():
+    # anchor 1.0 + window 6.0: an event AT 7.0 joins the window
+    q = _queue([1.0, 7.0, np.nextafter(7.0, 8.0)])
+    buf = AggregationBuffer(window_secs=6.0)
+    assert [e.client for e in buf.drain(q)] == [0, 1]
+    assert buf.peek_window(_queue([1.0, 7.0, 8.0])) == \
+        AggregationBuffer(window_secs=6.0).drain(_queue([1.0, 7.0, 8.0]))
+
+
+def test_peek_until_matches_drain_until_without_popping():
+    times = [1.0, 2.0, 3.0, 9.0]
+    for deadline in (0.0, 2.0, 3.0, 100.0):
+        for limit in (None, 2):
+            q = _queue(times)
+            peeked = AggregationBuffer.peek_until(q, deadline, limit=limit)
+            assert len(q) == len(times)
+            drained = AggregationBuffer.drain_until(q, deadline,
+                                                    limit=limit)
+            assert peeked == drained
+    assert AggregationBuffer.peek_until(EventQueue(), 5.0) == []
+
+
+# ---------------------------------------------------------------------------
 # vectorized wireless delays
 # ---------------------------------------------------------------------------
 
