@@ -2,15 +2,16 @@
 timeout tolerance beta, evaluation rounds kappa, tier count M, and the
 Dirichlet partitioner (alternative non-iid model).
 
-    PYTHONPATH=src python -m benchmarks.bench_ablations
+    PYTHONPATH=src python -m benchmarks.bench_ablations [--json [PATH]]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
-from benchmarks.common import RESULTS_DIR
+from benchmarks.common import RESULTS_DIR, add_json_arg, maybe_write_json
 from repro.config.base import FLConfig
 from repro.core import run_method
 from repro.fl.client import CNNTrainer, build_fl_clients
@@ -37,7 +38,11 @@ def _run(tag, **kw):
     return rec
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    add_json_arg(ap, "ablations")
+    args = ap.parse_args(argv)
+
     out = []
     for beta in (1.0, 1.2, 1.5, 2.0):
         out.append(_run(f"beta={beta}", beta=beta))
@@ -50,6 +55,9 @@ def main():
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "ablations.json"), "w") as f:
         json.dump(out, f, indent=1)
+    maybe_write_json(args, "ablations", {"cells": out},
+                     extra_context={"setting": S})
+    return out
 
 
 if __name__ == "__main__":

@@ -30,7 +30,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from common import add_json_arg, maybe_write_json, timed_reps
+from common import add_json_arg, maybe_write_json, timed_reps, traced_run
 from repro.config import get_arch
 from repro.config.base import FLConfig
 from repro.fl.client import CNNTrainer
@@ -56,7 +56,11 @@ def run_arm(trainer, net, fl, *, window_secs: float, eval_every: int,
             "virtual_time": hist.times[-1] if hist.times else 0.0,
             "store_path": hist.meta.get("store_path")}
 
-    return timed_reps(once, reps)
+    out = timed_reps(once, reps)
+    # phase-time breakdown from ONE extra traced rep (timed reps stay
+    # untraced so the A/B statistic is unperturbed)
+    out["phases"] = traced_run(once)
+    return out
 
 
 def main(argv=None):

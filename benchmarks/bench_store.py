@@ -52,7 +52,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from common import add_json_arg, maybe_write_json, time_fn, timed_reps
+from common import (add_json_arg, maybe_write_json, time_fn, timed_reps,
+                    traced_run)
 from repro.config.base import FLConfig
 from repro.core.state import ClientStateStore
 from repro.fl.network import WirelessNetwork
@@ -94,7 +95,13 @@ def run_arm(trainer, fl, seed, *, use_store: bool, window: int,
             "residency": hist.meta["residency"],
             "hot_rows": hist.meta["hot_rows"]}
 
-    return timed_reps(once, reps), hists[-1]
+    out = timed_reps(once, reps)
+    # phase-time breakdown (gather/train/merge/scatter/eviction) from
+    # ONE extra traced rep; timed reps stay untraced.  All reps are
+    # bit-identical, so the extra history appended to ``hists`` is
+    # indistinguishable from the timed ones.
+    out["phases"] = traced_run(once)
+    return out, hists[-1]
 
 
 def stacking_microbench(cohort: int):

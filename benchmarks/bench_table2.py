@@ -13,12 +13,14 @@ import os
 
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, run_fl_experiment
+from benchmarks.common import (RESULTS_DIR, add_json_arg, maybe_write_json,
+                               run_fl_experiment)
 
 METHODS = ["fedavg", "tifl", "fedasync", "feddct"]
 
 
-def run(ci: bool = True, mu: float = 0.1, primary_frac: float = 0.7):
+def run(ci: bool = True, mu: float = 0.1, primary_frac: float = 0.7,
+        args=None):
     if ci:
         settings = dict(rounds=25, n_clients=20, tau=3, scale=0.02,
                         eval_every=1)
@@ -49,11 +51,20 @@ def run(ci: bool = True, mu: float = 0.1, primary_frac: float = 0.7):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "table2.json"), "w") as f:
         json.dump(rows, f, indent=1)
+    if args is not None:
+        maybe_write_json(args, "table2", {"rows": rows},
+                         extra_context={"ci": ci, "mu": mu,
+                                        "primary_frac": primary_frac})
     return rows
 
 
-if __name__ == "__main__":
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    a = ap.parse_args()
-    run(ci=not a.full)
+    add_json_arg(ap, "table2")
+    a = ap.parse_args(argv)
+    return run(ci=not a.full, args=a)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,10 +5,12 @@ climb, Fig. 9), which the CI-scale run is too short for."""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
-from benchmarks.common import RESULTS_DIR, run_fl_experiment
+from benchmarks.common import (RESULTS_DIR, add_json_arg, maybe_write_json,
+                               run_fl_experiment)
 
 METHODS = ["fedavg", "tifl", "fedasync", "feddct"]
 SETTINGS = dict(rounds=150, n_clients=50, tau=5, scale=0.05, eval_every=2,
@@ -16,7 +18,7 @@ SETTINGS = dict(rounds=150, n_clients=50, tau=5, scale=0.05, eval_every=2,
 TARGETS = {"cnn-mnist": 0.60, "cnn-fmnist": 0.45}
 
 
-def run(workloads=("cnn-mnist", "cnn-fmnist")):
+def run(workloads=("cnn-mnist", "cnn-fmnist"), args=None):
     rows = []
     for arch in workloads:
         for method in METHODS:
@@ -34,8 +36,18 @@ def run(workloads=("cnn-mnist", "cnn-fmnist")):
                   f"total={rows[-1]['total_time_s']}", flush=True)
     with open(os.path.join(RESULTS_DIR, "table2_medium.json"), "w") as f:
         json.dump(rows, f, indent=1)
+    if args is not None:
+        maybe_write_json(args, "table2_medium", {"rows": rows},
+                         extra_context={"settings": SETTINGS,
+                                        "targets": TARGETS})
     return rows
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    add_json_arg(ap, "table2_medium")
+    return run(args=ap.parse_args(argv))
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -127,6 +127,26 @@ def timed_reps(run_once, reps: int) -> Dict:
     return best
 
 
+def traced_run(run_once) -> Dict:
+    """One EXTRA telemetry-enabled repetition of a harness arm.
+
+    The timed reps stay untraced (tracing's bookkeeping, however
+    cheap, must not perturb the A/B statistic); this runs the arm once
+    more under ``repro.obs`` and returns the phase-time breakdown —
+    total host seconds per span name — plus the counters and derived
+    rates, for the ``BENCH_*.json`` trajectory."""
+    from repro import obs
+    with obs.tracing() as tel:
+        run_once()
+    s = tel.summary()
+    out = {"phase_s": {name: agg["total_s"]
+                       for name, agg in sorted(s["spans"].items())},
+           "counters": s["counters"]}
+    if "rates" in s:
+        out["rates"] = s["rates"]
+    return out
+
+
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     """Median wall microseconds per call (pre-jitted fns)."""
     import jax

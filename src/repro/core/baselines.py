@@ -39,20 +39,33 @@ from repro.core.aggregation import staleness_merge
 from repro.core.engine import make_engine
 from repro.core.tiering import evaluate_client, tiering
 from repro.fl.metrics import RunHistory
+from repro.obs import telemetry as obs
+
+
+def _mesh_devices(mesh) -> int:
+    """Uniform ``meta["mesh_devices"]`` value across every loop (the
+    async runners record the same key), so tooling never has to branch
+    on the method to learn the execution width."""
+    return int(mesh.size) if mesh is not None else 1
 
 
 def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                engine: str = "batched", verbose: bool = False,
                eval_every: int = 1, mesh=None) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 11)
+    tel = obs.TEL
+    run_span = tel.span("run", method="fedavg").start()
     hist = RunHistory(method="fedavg", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
-                            "engine": engine})
+                            "engine": engine,
+                            "kernel_agg": use_kernel_agg,
+                            "mesh_devices": _mesh_devices(mesh)})
     eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
                       mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     for rnd in range(1, fl.rounds + 1):
+        tel.set_virtual_time(clock)
         sel = [int(c) for c in rng.choice(fl.n_clients,
                                           size=min(fl.tau, fl.n_clients),
                                           replace=False)]
@@ -60,13 +73,16 @@ def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         params = eng.train_round(params, sel, rnd)
         clock += float(times.max())              # waits for everyone
         if rnd % eval_every == 0:
-            acc = trainer.evaluate(params)
+            with tel.span("eval"):
+                acc = trainer.evaluate(params)
             hist.record(time=clock, rnd=rnd, acc=acc,
                         n_selected=len(sel))
             if verbose:
                 print(f"[fedavg] r={rnd:4d} t={clock:9.1f}s acc={acc:.4f}")
             if fl.target_accuracy and acc >= fl.target_accuracy:
                 break
+    run_span.end()
+    tel.summarize_into(hist.meta)
     return hist
 
 
@@ -74,9 +90,13 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
              engine: str = "batched", verbose: bool = False,
              eval_every: int = 1, mesh=None) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 13)
+    tel = obs.TEL
+    run_span = tel.span("run", method="tifl").start()
     hist = RunHistory(method="tifl", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
-                            "engine": engine})
+                            "engine": engine,
+                            "kernel_agg": use_kernel_agg,
+                            "mesh_devices": _mesh_devices(mesh)})
     eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
                       mesh=mesh)
     params = trainer.init_params(fl.seed)
@@ -101,6 +121,7 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
     probs = np.ones(n_tiers) / max(n_tiers, 1)
 
     for rnd in range(1, fl.rounds + 1):
+        tel.set_virtual_time(clock)
         live = [k for k in range(n_tiers) if credits[k] > 0 and tiers[k]]
         if not live:
             live = [k for k in range(n_tiers) if tiers[k]]
@@ -120,7 +141,11 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
             survivors.append(c)
         params = eng.train_round(params, survivors, rnd)
         clock += max(times) if times else 0.0
-        acc = trainer.evaluate(params) if rnd % eval_every == 0 else None
+        if rnd % eval_every == 0:
+            with tel.span("eval"):
+                acc = trainer.evaluate(params)
+        else:
+            acc = None
         if acc is not None:
             tier_acc[k] = acc
             # adaptive: favour tiers with lower observed accuracy (TiFL §4)
@@ -134,6 +159,8 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                       f"acc={acc:.4f}")
             if fl.target_accuracy and acc >= fl.target_accuracy:
                 break
+    run_span.end()
+    tel.summarize_into(hist.meta)
     return hist
 
 
@@ -277,31 +304,41 @@ def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
     stays a device program.
     """
     rng = np.random.default_rng(fl.seed + 17)
+    tel = obs.TEL
+    run_span = tel.span("run", method="fedprox").start()
     hist = RunHistory(method="fedprox", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "prox_mu": prox_mu,
-                            "engine": engine})
+                            "engine": engine,
+                            "kernel_agg": use_kernel_agg,
+                            "mesh_devices": _mesh_devices(mesh)})
     eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
                       mesh=mesh)
     params = trainer.init_params(fl.seed)
     clock = 0.0
     blend = 1.0 / (1.0 + prox_mu * 10)
     for rnd in range(1, fl.rounds + 1):
+        tel.set_virtual_time(clock)
         sel = [int(c) for c in rng.choice(fl.n_clients,
                                           size=min(fl.tau, fl.n_clients),
                                           replace=False)]
         times = network.delays(sel, rnd)
-        stacked, sizes = eng.train_clients(params, sel, rnd)
-        prox = jax.tree_util.tree_map(
-            lambda n, g: (blend * n.astype(jnp.float32)
-                          + (1 - blend) * g.astype(jnp.float32)[None]
-                          ).astype(n.dtype), stacked, params)
-        params = eng.aggregate(prox, sizes)
+        with tel.span("round.train", cohort=len(sel)):
+            stacked, sizes = eng.train_clients(params, sel, rnd)
+        with tel.span("round.aggregate", cohort=len(sel)):
+            prox = jax.tree_util.tree_map(
+                lambda n, g: (blend * n.astype(jnp.float32)
+                              + (1 - blend) * g.astype(jnp.float32)[None]
+                              ).astype(n.dtype), stacked, params)
+            params = eng.aggregate(prox, sizes)
         clock += float(times.max())
         if rnd % eval_every == 0:
-            acc = trainer.evaluate(params)
+            with tel.span("eval"):
+                acc = trainer.evaluate(params)
             hist.record(time=clock, rnd=rnd, acc=acc, n_selected=len(sel))
             if verbose:
                 print(f"[fedprox] r={rnd:4d} t={clock:9.1f}s acc={acc:.4f}")
             if fl.target_accuracy and acc >= fl.target_accuracy:
                 break
+    run_span.end()
+    tel.summarize_into(hist.meta)
     return hist

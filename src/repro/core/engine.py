@@ -32,6 +32,7 @@ from repro.core.aggregation import (aggregate_or_keep,
                                     staleness_merge_coefficients,
                                     staleness_weighted_merge,
                                     weighted_average_stacked)
+from repro.obs import telemetry as obs
 
 
 class BatchedClientEngine:
@@ -178,11 +179,15 @@ class BatchedClientEngine:
         decided host-side BEFORE training; the all-masked (every
         survivor zero-weighted) guard lives on device.
         """
-        stacked, sizes = self.train_clients(params, client_ids, rnd_seed)
+        tel = obs.TEL
+        with tel.span("round.train", cohort=len(client_ids)):
+            stacked, sizes = self.train_clients(params, client_ids,
+                                                rnd_seed)
         if stacked is None:
             return params
         w = sizes if weights is None else np.asarray(weights, np.float32)
-        return self.aggregate_or_keep(params, stacked, w)
+        with tel.span("round.aggregate", cohort=len(client_ids)):
+            return self.aggregate_or_keep(params, stacked, w)
 
     # -- fused store-backed async window --------------------------------
     def train_window(self, store, params, client_ids: Sequence[int],
@@ -207,6 +212,7 @@ class BatchedClientEngine:
         n = len(ids)
         if n == 0:
             return params, store.flatten(params)
+        tel = obs.TEL
         coef = staleness_merge_coefficients(alphas)
         merge_kw = dict(use_kernel=self.use_kernel_agg,
                         interpret=self.interpret)
@@ -216,31 +222,38 @@ class BatchedClientEngine:
         # promote one row per gather_one.
         stage = getattr(store, "ensure_window", None)
         if stage is not None:
-            stage(ids)
+            with tel.span("window.stage", cohort=n):
+                stage(ids)
         if self._can_cohort:
             run_ids, run_seeds = self._pad_pow2(ids, seeds)
-            starts = store.gather(run_ids)
+            with tel.span("window.gather", rows=len(run_ids)):
+                starts = store.gather(run_ids)
             try:
-                stacked, _ = self._local_train_cohort(starts, run_ids,
-                                                      run_seeds)
+                with tel.span("window.train", cohort=n,
+                              padded=len(run_ids)):
+                    stacked, _ = self._local_train_cohort(starts, run_ids,
+                                                          run_seeds)
                 pad = np.zeros(len(run_ids) - n, np.float32)
-                return store.merge_scatter(
-                    run_ids, stacked, np.concatenate([coef, pad]), params,
-                    **merge_kw)
+                with tel.span("window.merge_scatter", rows=len(run_ids)):
+                    return store.merge_scatter(
+                        run_ids, stacked, np.concatenate([coef, pad]),
+                        params, **merge_kw)
             except NotImplementedError:
                 self._can_cohort = False
         # looped fallback (trainers without local_train_cohort): rows
         # still merge + scatter through the store's fused program.
-        outs = [self.trainer.local_train(store.gather_one(c), c,
-                                         rnd_seed=s)
-                for c, s in zip(ids, seeds)]
+        with tel.span("window.train", cohort=n, looped=True):
+            outs = [self.trainer.local_train(store.gather_one(c), c,
+                                             rnd_seed=s)
+                    for c, s in zip(ids, seeds)]
         run_ids, trees = self._pad_pow2(ids, [p for p, _ in outs])
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *trees)
         pad = np.zeros(len(run_ids) - n, np.float32)
-        return store.merge_scatter(run_ids, stacked,
-                                   np.concatenate([coef, pad]), params,
-                                   **merge_kw)
+        with tel.span("window.merge_scatter", rows=len(run_ids)):
+            return store.merge_scatter(run_ids, stacked,
+                                       np.concatenate([coef, pad]), params,
+                                       **merge_kw)
 
 
 def make_engine(trainer, *, use_kernel_agg: bool = False,

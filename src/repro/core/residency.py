@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.core.state import ClientStateStore
+from repro.obs import telemetry as obs
 
 
 class HostColdTier:
@@ -244,7 +245,8 @@ class TieredClientStateStore(ClientStateStore):
         return tuple(self._slots)
 
     def _ensure_hot(self, want: Sequence[int], protect=frozenset(),
-                    partial: bool = False) -> List[int]:
+                    partial: bool = False,
+                    kind: str = "demand") -> List[int]:
         """Make ``want`` (unique client ids) resident in the hot tier.
 
         Eviction is LRU over residents outside ``protect`` and
@@ -254,15 +256,23 @@ class TieredClientStateStore(ClientStateStore):
         ``partial=True`` (prefetch) stops quietly when every remaining
         slot is pinned instead of raising.  Returns the clients
         actually promoted.
+
+        ``kind`` tags the telemetry counters ("demand" = a gather /
+        ensure_window that needed the rows NOW, "prefetch" = lookahead
+        staging): the prefetch hit rate is
+        ``demand_hit / (demand_hit + demand_promote)`` — the fraction
+        of needed rows already resident when asked for.
         """
         want = [int(c) for c in want]
         pinned = {int(c) for c in protect} | set(want)
         staged: List[Tuple[int, int]] = []
         demote_c: List[int] = []
         demote_s: List[int] = []
+        n_hit = n_evict_clean = 0
         for c in want:
             if c in self._slots:
                 self._slots.move_to_end(c)
+                n_hit += 1
                 continue
             if self._free:
                 slot = self._free.pop()
@@ -281,20 +291,33 @@ class TieredClientStateStore(ClientStateStore):
                     self._dirty.discard(victim)
                     demote_c.append(victim)
                     demote_s.append(slot)
+                else:
+                    n_evict_clean += 1
             self._slots[c] = slot
             staged.append((c, slot))
+        tel = obs.TEL
+        if n_hit:
+            tel.inc(f"residency.{kind}_hit", n_hit)
+        if n_evict_clean:
+            tel.inc("residency.evict_clean", n_evict_clean)
         if demote_c:
             # write-behind: read the victims' rows BEFORE the promotion
             # write donates the buffer (np.asarray forces completion)
-            frows, irows = self._fns.read_rows(self.buf, self.ibuf,
-                                               self._ids(demote_s))
-            self.cold.write(demote_c, np.asarray(frows), np.asarray(irows))
+            with tel.span("residency.write_behind", rows=len(demote_c)):
+                frows, irows = self._fns.read_rows(self.buf, self.ibuf,
+                                                   self._ids(demote_s))
+                self.cold.write(demote_c, np.asarray(frows),
+                                np.asarray(irows))
+            tel.inc("residency.write_behind", len(demote_c))
             self.n_demoted += len(demote_c)
         if staged:
-            cf, ci = self.cold.read([c for c, _ in staged])
-            self.buf, self.ibuf = self._fns.write_rows(
-                self.buf, self.ibuf, self._ids([s for _, s in staged]),
-                cf, ci)
+            with tel.span("residency.promote", rows=len(staged),
+                          kind=kind):
+                cf, ci = self.cold.read([c for c, _ in staged])
+                self.buf, self.ibuf = self._fns.write_rows(
+                    self.buf, self.ibuf,
+                    self._ids([s for _, s in staged]), cf, ci)
+            tel.inc(f"residency.{kind}_promote", len(staged))
             self.n_promoted += len(staged)
         return [c for c, _ in staged]
 
@@ -308,7 +331,7 @@ class TieredClientStateStore(ClientStateStore):
         correctness.  Returns the clients actually promoted."""
         uniq = list(dict.fromkeys(int(x) for x in client_ids))
         return self._ensure_hot(uniq[:self.capacity], protect=keep,
-                                partial=True)
+                                partial=True, kind="prefetch")
 
     def ensure_window(self, client_ids: Sequence[int]) -> None:
         """Stage a whole window's rows in one batched promotion (the
@@ -349,8 +372,11 @@ class TieredClientStateStore(ClientStateStore):
             self._ensure_hot(uniq)
             slots = [self._slots[c] for c in idl]
             return self._fns.gather(self.buf, self.ibuf, self._ids(slots))
-        f, i = self._host_rows(idl)
-        return self._fns.from_rows(f, i)
+        # cohort wider than the hot tier: host-side assembly, no staging
+        obs.TEL.inc("residency.oversubscribed_gather", len(uniq))
+        with obs.TEL.span("residency.host_gather", rows=len(idl)):
+            f, i = self._host_rows(idl)
+            return self._fns.from_rows(f, i)
 
     def gather_one(self, client_id: int):
         c = int(client_id)
@@ -372,6 +398,7 @@ class TieredClientStateStore(ClientStateStore):
                 self._dirty.add(c)
         missing = [c for c in uniq if c not in self._slots]
         if missing:
+            obs.TEL.inc("residency.write_around", len(missing))
             self.cold.write(missing, np.asarray(frow, np.float32),
                             np.asarray(irow, np.int32))
 

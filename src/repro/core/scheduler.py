@@ -34,17 +34,23 @@ from repro.core.engine import make_engine
 from repro.core.selection import cstt
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
+from repro.obs import telemetry as obs
 
 
 def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                engine: str = "batched", verbose: bool = False,
                eval_every: int = 1, mesh=None) -> RunHistory:
     rng = np.random.default_rng(fl.seed + 7)
+    tel = obs.TEL
+    run_span = tel.span("run", method="feddct").start()
     hist = RunHistory(method="feddct", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
                             "omega": fl.omega, "tau": fl.tau,
-                            "n_tiers": fl.n_tiers, "engine": engine})
+                            "n_tiers": fl.n_tiers, "engine": engine,
+                            "kernel_agg": use_kernel_agg,
+                            "mesh_devices": (int(mesh.size)
+                                             if mesh is not None else 1)})
     eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
                       mesh=mesh)
     params = trainer.init_params(fl.seed)
@@ -73,13 +79,16 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
     m = max(fl.n_clients // fl.n_tiers, 1)
 
     for rnd in range(1, fl.rounds + 1):
+        tel.set_virtual_time(clock)
         # ---- rejoin clients whose re-evaluation completed --------------
         for c in [c for c, (tr, _) in eval_lane.items() if tr <= clock]:
             at[c] = eval_lane.pop(c)[1]
 
         avail_at = {c: v for c, v in at.items() if c not in eval_lane}
+        sel_span = tel.span("round.select", avail=len(avail_at)).start()
         tiers = tiering(avail_at, m)
         if not tiers:
+            sel_span.end()
             break
 
         selected, d_max, t_ptr = cstt(
@@ -103,6 +112,9 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
             survivors.append(c)
             at[c] = update_avg_time(at[c], ct[c], st)
             ct[c] += 1
+        sel_span.end()
+        if n_straggle:
+            tel.inc("stragglers.dropped", n_straggle)
 
         # ---- one batched device program for the whole cohort ----------
         params = eng.train_round(params, survivors, rnd)
@@ -114,7 +126,8 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         clock += d_round
 
         if rnd % eval_every == 0:
-            v_now = trainer.evaluate(params)
+            with tel.span("eval"):
+                v_now = trainer.evaluate(params)
             hist.record(time=clock, rnd=rnd, acc=v_now, tier=t_ptr,
                         n_selected=len(selected), n_stragglers=n_straggle)
             v_prev, v_curr = v_curr, v_now
@@ -123,4 +136,6 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
                       f"acc={v_now:.4f} sel={len(selected)} str={n_straggle}")
             if fl.target_accuracy and v_now >= fl.target_accuracy:
                 break
+    run_span.end()
+    tel.summarize_into(hist.meta)
     return hist

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core.aggregation import _merge_folded_jnp
 from repro.kernels.ops import fedagg_fold_pytree, on_cpu, tree_spec
+from repro.obs import telemetry as obs
 
 _FLOAT_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
 
@@ -231,6 +232,8 @@ class ClientStateStore:
         # XLA CPU does not implement buffer donation — donating there
         # only emits warnings.  Donate on real accelerator backends.
         self._donate = jax.default_backend() != "cpu"
+        obs.TEL.inc("store.donation_active" if self._donate
+                    else "store.donation_skipped")
         self._fns = _programs(treedef, self.entries, self._donate)
         fbuf, ibuf = self._fns.init(template_params, self.rows)
         if self.mesh is not None:
@@ -350,12 +353,16 @@ class ClientStateStore:
         bit-identical to the dict path and across residency layouts by
         construction.
         """
+        tel = obs.TEL
         coef = jnp.asarray(np.asarray(coef, np.float32))
-        if use_kernel:
-            interp = on_cpu() if interpret is None else bool(interpret)
-            new_params = fedagg_fold_pytree(params, stacked_updates,
-                                            coef, interpret=interp)
-        else:
-            new_params = _merge_folded_jnp(params, stacked_updates, coef)
-        row = self.scatter_params(ids, new_params)
+        with tel.span("store.merge", rows=len(ids), kernel=use_kernel):
+            if use_kernel:
+                interp = on_cpu() if interpret is None else bool(interpret)
+                new_params = fedagg_fold_pytree(params, stacked_updates,
+                                                coef, interpret=interp)
+            else:
+                new_params = _merge_folded_jnp(params, stacked_updates,
+                                               coef)
+        with tel.span("store.scatter", rows=len(ids)):
+            row = self.scatter_params(ids, new_params)
         return new_params, row

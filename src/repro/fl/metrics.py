@@ -4,8 +4,13 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Dict, List, Optional
+
+# serialization schema of ``to_json``; bump on breaking layout changes.
+# v0 = the pre-versioned ``__dict__`` dump (no ``schema_version`` key),
+# still accepted by ``from_json``.
+SCHEMA_VERSION = 1
 
 
 @dataclass
@@ -45,13 +50,35 @@ class RunHistory:
                 return t
         return None
 
+    # -- JSON round-trip -------------------------------------------------
+    def to_json(self) -> Dict:
+        """Plain-dict form with an explicit top-level ``schema_version``
+        (kept OUT of ``meta`` so a load/save cycle leaves ``meta``
+        byte-identical to what the run recorded)."""
+        d = {"schema_version": SCHEMA_VERSION}
+        d.update({f.name: getattr(self, f.name) for f in fields(self)})
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "RunHistory":
+        """Inverse of ``to_json``.  Accepts legacy v0 dicts (no
+        ``schema_version``); rejects versions newer than this code;
+        ignores unknown keys so minor forward drift loads."""
+        d = dict(d)
+        version = d.pop("schema_version", 0)
+        if version > SCHEMA_VERSION:
+            raise ValueError(
+                f"RunHistory schema_version {version} is newer than "
+                f"supported {SCHEMA_VERSION}; upgrade the code")
+        known = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
     def save(self, path: str):
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         with open(path, "w") as f:
-            json.dump(self.__dict__, f)
+            json.dump(self.to_json(), f)
 
     @classmethod
     def load(cls, path: str) -> "RunHistory":
         with open(path) as f:
-            d = json.load(f)
-        return cls(**d)
+            return cls.from_json(json.load(f))

@@ -68,6 +68,16 @@ def main(argv=None):
                          "devices (0 = single-device engine; on CPU "
                          "force devices first with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record runtime telemetry (spans + counters) "
+                         "and write the trace here; the aggregate also "
+                         "lands in the history's meta['telemetry']")
+    ap.add_argument("--trace-format", default="jsonl",
+                    choices=["jsonl", "chrome"],
+                    help="--trace output format: 'jsonl' = line-delimited "
+                         "event log (repro.obs.validate checks it); "
+                         "'chrome' = trace_event JSON for "
+                         "chrome://tracing / Perfetto")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -94,7 +104,17 @@ def main(argv=None):
                                              "feddct_async"):
         kw["store_capacity"] = args.hot_rows
         kw["store_cold_dir"] = args.cold_dir
-    hist = run_method(args.method, trainer, net, fl, **kw)
+    if args.trace:
+        from repro import obs
+        with obs.tracing() as tel:
+            hist = run_method(args.method, trainer, net, fl, **kw)
+        if args.trace_format == "chrome":
+            tel.export_chrome(args.trace)
+        else:
+            tel.export_jsonl(args.trace)
+        print(f"[fl_train] trace ({args.trace_format}) -> {args.trace}")
+    else:
+        hist = run_method(args.method, trainer, net, fl, **kw)
     if hist.accuracy:
         print(f"[fl_train] {args.method} on {args.arch}: "
               f"final acc={hist.accuracy[-1]:.4f} "

@@ -1,0 +1,28 @@
+"""Runtime telemetry layer: spans, counters, structured trace export.
+
+Instrumented modules import the submodule and read the active
+telemetry fresh on every use (zero-overhead-when-disabled contract —
+one attribute lookup on the no-op singleton):
+
+    from repro.obs import telemetry as obs
+    with obs.TEL.span("window.gather", rows=n):
+        ...
+    obs.TEL.inc("residency.demand_promote", k)
+
+Users enable tracing around a run and export afterwards:
+
+    from repro import obs
+    with obs.tracing() as tel:
+        hist = run_method(...)          # meta["telemetry"] is folded in
+    tel.export_chrome("trace.json")     # chrome://tracing / Perfetto
+    tel.export_jsonl("trace.jsonl")     # repro.obs.validate checks this
+
+or from the CLI: ``fl_train.py --trace PATH [--trace-format
+jsonl|chrome]``.
+"""
+
+from repro.obs.telemetry import (NOOP, SCHEMA_VERSION, NoopTelemetry,
+                                 Telemetry, disable, enable, tracing)
+
+__all__ = ["NOOP", "SCHEMA_VERSION", "NoopTelemetry", "Telemetry",
+           "disable", "enable", "tracing"]

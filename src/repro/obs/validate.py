@@ -1,0 +1,93 @@
+"""Validate a JSONL telemetry trace against the export schema.
+
+    PYTHONPATH=src python -m repro.obs.validate trace.jsonl
+
+Exit 0 when the file is a well-formed trace (meta header first, every
+line a known record type with its required keys); exit 2 with a
+per-line diagnostic otherwise.  CI runs this on the traced
+``fl_train`` smoke before uploading the trace artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List, Tuple
+
+from repro.obs.export import JSONL_TYPES
+from repro.obs.telemetry import SCHEMA_VERSION
+
+REQUIRED = {
+    "meta": ("schema_version", "clock"),
+    "span": ("name", "ts_us", "dur_us", "vt0", "vt1", "args"),
+    "counter": ("name", "value"),
+    "gauge": ("name", "last", "series"),
+    "hist": ("name", "count", "mean", "p50", "p95", "max"),
+    "summary": ("wall_s", "spans", "counters"),
+}
+
+
+def validate_lines(lines) -> Tuple[List[str], dict]:
+    """-> (errors, counts-by-type); empty errors == valid trace."""
+    errors: List[str] = []
+    counts = {t: 0 for t in JSONL_TYPES}
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {i}: not JSON ({e})")
+            continue
+        t = rec.get("type")
+        if t not in JSONL_TYPES:
+            errors.append(f"line {i}: unknown record type {t!r}")
+            continue
+        counts[t] += 1
+        missing = [k for k in REQUIRED[t] if k not in rec]
+        if missing:
+            errors.append(f"line {i}: {t} record missing {missing}")
+        if t == "meta":
+            if i != 1:
+                errors.append(f"line {i}: meta header must be line 1")
+            elif rec.get("schema_version") != SCHEMA_VERSION:
+                errors.append(
+                    f"line 1: schema_version "
+                    f"{rec.get('schema_version')!r} != {SCHEMA_VERSION}")
+    if counts["meta"] != 1:
+        errors.append(f"expected exactly 1 meta header, got "
+                      f"{counts['meta']}")
+    if counts["summary"] != 1:
+        errors.append(f"expected exactly 1 summary record, got "
+                      f"{counts['summary']}")
+    if counts["span"] == 0:
+        errors.append("trace contains no spans")
+    return errors, counts
+
+
+def validate_file(path: str) -> Tuple[List[str], dict]:
+    with open(path) as f:
+        return validate_lines(f)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m repro.obs.validate TRACE.jsonl",
+              file=sys.stderr)
+        return 2
+    errors, counts = validate_file(argv[0])
+    if errors:
+        for e in errors:
+            print(f"[validate] {e}", file=sys.stderr)
+        print(f"[validate] {argv[0]}: INVALID ({len(errors)} error(s))",
+              file=sys.stderr)
+        return 2
+    print(f"[validate] {argv[0]}: OK  "
+          + "  ".join(f"{t}={n}" for t, n in counts.items() if n))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

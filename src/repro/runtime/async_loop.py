@@ -44,6 +44,7 @@ from repro.core.selection import cstt
 from repro.core.state import ClientStateStore
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
+from repro.obs import telemetry as obs
 from repro.runtime.buffer import AggregationBuffer
 from repro.runtime.events import ClientEvent, EventQueue
 
@@ -218,6 +219,8 @@ class AsyncRunner:
 
     def run(self) -> RunHistory:
         fl, net = self.fl, self.network
+        tel = obs.TEL
+        run_span = tel.span("run", method=self.method).start()
         eng = make_engine(self.trainer, use_kernel_agg=self.use_kernel_agg,
                           engine=self.engine, mesh=self.mesh)
         params = self.trainer.init_params(fl.seed)
@@ -244,7 +247,9 @@ class AsyncRunner:
                   "residency": (store.residency if store is not None
                                 else "dict"),
                   "hot_rows": store.rows if store is not None else 0,
-                  "kernel_agg": self.use_kernel_agg})
+                  "kernel_agg": self.use_kernel_agg,
+                  "mesh_devices": (int(self.mesh.size)
+                                   if self.mesh is not None else 1)})
         first = net.delays(np.arange(fl.n_clients), 0)
         q = EventQueue([ClientEvent(float(t), c, 0, 0, cost=float(t))
                         for c, t in enumerate(first)])
@@ -252,6 +257,7 @@ class AsyncRunner:
         # rounds * tau client updates
         max_updates = fl.rounds * fl.tau
         version, upd, clock = 0, 0, 0.0
+        prev_peek = None   # lookahead accuracy: last prefetch's forecast
         while upd < max_updates and q:
             limit = max_updates - upd
             batch = self.buffer.drain(q, limit=limit)
@@ -259,6 +265,13 @@ class AsyncRunner:
             # windows close at anchor + window_secs (the server must wait
             # out the deadline — it cannot know nothing else is coming)
             clock = self.buffer.close_time(batch, limit=limit)
+            tel.set_virtual_time(clock)
+            tel.observe("cohort.size", len(batch))
+            if prev_peek is not None:
+                hits = sum(1 for e in batch if e.client in prev_peek)
+                tel.inc("lookahead.hit", hits)
+                tel.inc("lookahead.miss", len(batch) - hits)
+                prev_peek = None
             if hasattr(store, "prefetch") and q and limit > len(batch):
                 # EventQueue lookahead: the finish times of the NEXT
                 # window are already in the heap, so its rows stage
@@ -266,30 +279,35 @@ class AsyncRunner:
                 # in-flight batch is pinned against eviction; the peek
                 # never perturbs pop order, and a stale hint only costs
                 # swaps (gather/merge re-stage anything missing).
-                upcoming = self.buffer.peek_window(
-                    q, limit=limit - len(batch))
-                store.prefetch([e.client for e in upcoming],
-                               keep=[e.client for e in batch])
-            if store is not None:
-                # the merged clients' snapshot rows are re-scattered
-                # inside the fused window step itself
-                params = _merge_window_store(eng, store, params, batch,
-                                             fl, version)
-            else:
-                params = _merge_window(eng, params, snapshots, batch, fl,
-                                       version)
+                with tel.span("window.prefetch"):
+                    upcoming = self.buffer.peek_window(
+                        q, limit=limit - len(batch))
+                    store.prefetch([e.client for e in upcoming],
+                                   keep=[e.client for e in batch])
+                prev_peek = {e.client for e in upcoming}
+            with tel.span("window.merge", cohort=len(batch)):
+                if store is not None:
+                    # the merged clients' snapshot rows are re-scattered
+                    # inside the fused window step itself
+                    params = _merge_window_store(eng, store, params, batch,
+                                                 fl, version)
+                else:
+                    params = _merge_window(eng, params, snapshots, batch,
+                                           fl, version)
             version += len(batch)
             self.cohort_sizes.append(len(batch))
-            rnds = np.asarray([e.rnd + 1 for e in batch])
-            nxt = net.delays([e.client for e in batch], rnds)
-            for e, t in zip(batch, nxt):
-                if store is None:
-                    snapshots[e.client] = params
-                q.push(ClientEvent(clock + float(t), e.client, version,
-                                   e.rnd + 1, cost=float(t)))
+            with tel.span("window.reschedule", cohort=len(batch)):
+                rnds = np.asarray([e.rnd + 1 for e in batch])
+                nxt = net.delays([e.client for e in batch], rnds)
+                for e, t in zip(batch, nxt):
+                    if store is None:
+                        snapshots[e.client] = params
+                    q.push(ClientEvent(clock + float(t), e.client, version,
+                                       e.rnd + 1, cost=float(t)))
             prev_upd, upd = upd, upd + len(batch)
             if upd // self.eval_every > prev_upd // self.eval_every:
-                acc = self.trainer.evaluate(params)
+                with tel.span("eval"):
+                    acc = self.trainer.evaluate(params)
                 hist.record(time=clock, rnd=upd, acc=acc,
                             n_selected=len(batch))
                 if self.verbose:
@@ -300,13 +318,16 @@ class AsyncRunner:
         # terminal eval: the loop can exit between eval points (budget
         # exhausted off-cadence) — always record the true final state.
         if not hist.rounds or hist.rounds[-1] != upd:
-            acc = self.trainer.evaluate(params)
+            with tel.span("eval"):
+                acc = self.trainer.evaluate(params)
             hist.record(time=clock, rnd=upd, acc=acc,
                         n_selected=self.cohort_sizes[-1]
                         if self.cohort_sizes else 0)
         hist.meta["mean_cohort"] = (float(np.mean(self.cohort_sizes))
                                     if self.cohort_sizes else 0.0)
         hist.meta["n_drains"] = len(self.cohort_sizes)
+        run_span.end()
+        tel.summarize_into(hist.meta)
         return hist
 
 
@@ -328,6 +349,8 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     client's running-average time).
     """
     rng = np.random.default_rng(fl.seed + 19)
+    tel = obs.TEL
+    run_span = tel.span("run", method="feddct_async").start()
     eng = make_engine(trainer, use_kernel_agg=use_kernel_agg, engine=engine,
                       mesh=mesh)
     params = trainer.init_params(fl.seed)
@@ -352,7 +375,9 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                                           if store is not None else "dict"),
                             "hot_rows": (store.rows if store is not None
                                          else 0),
-                            "kernel_agg": use_kernel_agg})
+                            "kernel_agg": use_kernel_agg,
+                            "mesh_devices": (int(mesh.size)
+                                             if mesh is not None else 1)})
     clock = 0.0
 
     # initial kappa-round evaluation of every client (parallel), exactly
@@ -378,10 +403,12 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     cohort_sizes: List[int] = []
 
     for rnd in range(1, fl.rounds + 1):
+        tel.set_virtual_time(clock)
         avail_at = {c: v for c, v in at.items() if c not in inflight}
         deadline = clock + fl.omega
         n_sel = 0
         if avail_at:
+            sel_span = tel.span("round.select", avail=len(avail_at)).start()
             tiers = tiering(avail_at, m)
             selected, d_max, t_ptr = cstt(
                 t_ptr, v_prev, v_curr, tiers, avail_at, ct, fl.tau,
@@ -402,21 +429,36 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                 deadline = clock + max(min(d_max[k], fl.omega)
                                        for k in used)
             n_sel = len(selected)
+            sel_span.end()
 
+        peeked = None
         if hasattr(store, "prefetch") and q:
             # the tier timeout is known BEFORE the window opens: every
             # completion the coming drain will pop can stage
             # host->device now, while selection's device work retires.
-            upcoming = AggregationBuffer.peek_until(q, deadline)
-            store.prefetch([e.client for e in upcoming])
+            with tel.span("window.prefetch"):
+                upcoming = AggregationBuffer.peek_until(q, deadline)
+                store.prefetch([e.client for e in upcoming])
+            peeked = {e.client for e in upcoming}
         batch = AggregationBuffer.drain_until(q, deadline)
+        tel.observe("cohort.size", len(batch))
+        if peeked is not None:
+            hits = sum(1 for e in batch if e.client in peeked)
+            tel.inc("lookahead.hit", hits)
+            tel.inc("lookahead.miss", len(batch) - hits)
         if batch:
-            if store is not None:
-                params = _merge_window_store(eng, store, params, batch,
-                                             fl, version)
-            else:
-                params = _merge_window(eng, params, snapshots, batch, fl,
-                                       version)
+            # completions selected in an EARLIER round merging now are
+            # stragglers the semi-async design carried instead of drops
+            carried = sum(1 for e in batch if e.rnd < rnd)
+            if carried:
+                tel.inc("stragglers.carried", carried)
+            with tel.span("window.merge", cohort=len(batch)):
+                if store is not None:
+                    params = _merge_window_store(eng, store, params, batch,
+                                                 fl, version)
+                else:
+                    params = _merge_window(eng, params, snapshots, batch,
+                                           fl, version)
             version += len(batch)
             cohort_sizes.append(len(batch))
             for e in batch:
@@ -429,9 +471,11 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
         # Eq. 5/6 window close: last arrival if everyone made it, the
         # full deadline if stragglers are still in flight.
         clock = deadline if q else (batch[-1].finish if batch else deadline)
+        tel.gauge("queue.inflight", len(q))
 
         if rnd % eval_every == 0:
-            v_now = trainer.evaluate(params)
+            with tel.span("eval"):
+                v_now = trainer.evaluate(params)
             hist.record(time=clock, rnd=rnd, acc=v_now, tier=t_ptr,
                         n_selected=n_sel, n_stragglers=len(q))
             v_prev, v_curr = v_curr, v_now
@@ -442,9 +486,13 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
             if fl.target_accuracy and v_now >= fl.target_accuracy:
                 break
     if not hist.rounds or hist.rounds[-1] != rnd:
-        hist.record(time=clock, rnd=rnd, acc=trainer.evaluate(params),
+        with tel.span("eval"):
+            acc = trainer.evaluate(params)
+        hist.record(time=clock, rnd=rnd, acc=acc,
                     tier=t_ptr, n_stragglers=len(q))
     hist.meta["mean_cohort"] = (float(np.mean(cohort_sizes))
                                 if cohort_sizes else 0.0)
     hist.meta["n_drains"] = len(cohort_sizes)
+    run_span.end()
+    tel.summarize_into(hist.meta)
     return hist

@@ -22,6 +22,7 @@ from __future__ import annotations
 import math
 from typing import List, Optional
 
+from repro.obs import telemetry as obs
 from repro.runtime.events import ClientEvent, EventQueue
 
 
@@ -46,7 +47,10 @@ class AggregationBuffer:
         """Pop one window of completions (>= 1 event; the anchor is the
         earliest pending completion).  ``limit`` hard-caps the count
         (the runner's remaining update budget)."""
+        tel = obs.TEL
+        tel.gauge("queue.depth", len(queue))
         if not queue:
+            tel.inc("drain.queue_empty")
             return []
         anchor = queue.pop()
         batch = [anchor]
@@ -55,6 +59,19 @@ class AggregationBuffer:
                     if self.window_secs > 0 else math.inf)
         while queue and len(batch) < cap and queue.peek().finish <= deadline:
             batch.append(queue.pop())
+        # classify what closed the window (counter catalogue: drain.*)
+        if len(batch) >= cap:
+            if limit is not None and cap == limit and (
+                    self.window == 0 or limit < self.window):
+                tel.inc("drain.budget")
+            elif self.window > 0:
+                tel.inc("drain.count")
+            else:
+                tel.inc("drain.sequential")
+        elif self.window_secs > 0:
+            tel.inc("drain.deadline")
+        else:
+            tel.inc("drain.queue_drained")
         return batch
 
     def peek_window(self, queue: EventQueue,
@@ -97,10 +114,16 @@ class AggregationBuffer:
         """Pop every completion with ``finish <= deadline`` (possibly
         none) — the semi-async FedDCT window, where the tier timeout
         sets the deadline before any event is seen."""
+        tel = obs.TEL
+        tel.gauge("queue.depth", len(queue))
         batch: List[ClientEvent] = []
         cap = math.inf if limit is None else limit
         while queue and len(batch) < cap and queue.peek().finish <= deadline:
             batch.append(queue.pop())
+        if len(batch) >= cap:
+            tel.inc("drain.budget")
+        else:
+            tel.inc("drain.deadline")
         return batch
 
     @staticmethod

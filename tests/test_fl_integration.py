@@ -111,6 +111,28 @@ def test_history_json_roundtrip(tmp_path):
     assert h2.meta == h.meta
 
 
+def test_history_schema_version():
+    """``to_json`` stamps the schema version at the TOP level (never in
+    meta); ``from_json`` round-trips every field, accepts legacy v0
+    dicts, ignores unknown keys, and rejects newer versions."""
+    from repro.fl.metrics import SCHEMA_VERSION
+    h = RunHistory(method="x", arch="y", meta={"k": 1})
+    h.record(time=1.0, rnd=1, acc=0.5, tier=2, n_selected=3,
+             n_stragglers=1)
+    d = h.to_json()
+    assert d["schema_version"] == SCHEMA_VERSION
+    assert "schema_version" not in d["meta"]
+    h2 = RunHistory.from_json(d)
+    assert h2 == h
+    # legacy v0: a bare __dict__ dump with no schema_version key
+    legacy = {k: v for k, v in d.items() if k != "schema_version"}
+    assert RunHistory.from_json(legacy) == h
+    # forward drift: unknown keys are dropped, not fatal
+    assert RunHistory.from_json({**d, "novel_field": 42}) == h
+    with pytest.raises(ValueError, match="newer"):
+        RunHistory.from_json({**d, "schema_version": SCHEMA_VERSION + 1})
+
+
 def test_time_to_accuracy_helper():
     h = RunHistory(method="x", arch="y")
     h.record(time=1.0, rnd=1, acc=0.2)
