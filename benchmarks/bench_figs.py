@@ -10,7 +10,8 @@ import os
 
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, run_fl_experiment
+from benchmarks.common import (RESULTS_DIR, add_json_arg, maybe_write_json,
+                               run_fl_experiment)
 
 METHODS = ["fedavg", "tifl", "fedasync", "feddct"]
 
@@ -107,12 +108,28 @@ def fig9_tier_trace(ci=True):
 ALL = {"fig5": fig5_noniid, "fig6": fig6_mu, "fig7": fig7_complex,
        "fig8": fig8_stable, "fig9": fig9_tier_trace}
 
+
+def _bench_summary(name, out):
+    """Compact per-figure scalars for ``BENCH_figs.json`` (the full
+    trajectories stay in results/): seeded-deterministic, so the
+    compare gate checks them exactly."""
+    if name == "fig9":
+        return {"slope": out["slope"], "n_rounds": len(out["tier"])}
+    return {k: {"best_acc": max(v["acc"]) if v["acc"] else 0.0,
+                "final_virtual_time": v["t"][-1] if v["t"] else 0.0}
+            for k, v in out.items()}
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    add_json_arg(ap, "figs")
     a = ap.parse_args()
+    results = {}
     for name, fn in ALL.items():
         if a.only and name != a.only:
             continue
-        fn(ci=not a.full)
+        results[name] = _bench_summary(name, fn(ci=not a.full))
+    maybe_write_json(a, "figs", results,
+                     extra_context={"full": a.full, "only": a.only})

@@ -49,6 +49,7 @@ def write_bench_json(name: str, results: Dict, path: Optional[str] = None,
     defaults.  Returns the path written."""
     out = path or os.path.join(os.path.dirname(__file__),
                                f"BENCH_{name}.json")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     import jax
     context = {
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),

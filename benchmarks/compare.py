@@ -1,0 +1,230 @@
+"""Diff a fresh benchmark ``--json`` result against a committed
+``BENCH_*.json`` baseline — the bench-trajectory regression gate.
+
+    python benchmarks/compare.py BASELINE FRESH [--tol 0.6] \
+        [--tol-metric SUBSTR=TOL ...] [--skip SUBSTR ...]
+
+Both files are ``benchmarks/common.write_bench_json`` payloads
+(``{"bench", "context", "results"}``).  The gate walks the BASELINE's
+``results`` tree; every baseline key must exist in the fresh results
+(schema-strict — a renamed or vanished metric is a regression even if
+nothing got slower), while extra fresh keys are fine (new metrics land
+without a baseline refresh).
+
+Values are classified per leaf key, because one tolerance cannot serve
+three kinds of number:
+
+* **timing** (``wall_s``, ``*_s``, ``*_us``) — lower is better; fresh
+  may be up to ``1/(1-tol)`` x the baseline (default tol 0.6 -> 2.5x:
+  CI boxes are noisy and 2-core runners deschedule) before it counts
+  as a regression;
+* **throughput** (``*_per_sec``, ``*_rate``, ``speedup*``) — higher is
+  better, same band mirrored;
+* **deterministic** (everything else numeric: event counts, cohort
+  sizes, virtual time, promotion counts — all seeded) — must match
+  exactly (tiny float epsilon), as must booleans and strings;
+* **skipped** (``phases`` subtrees, ``*_samples`` lists, ``jax.*``) —
+  presence-checked only; their values vary run to run by construction.
+
+Exit status: 0 = within tolerance, 1 = regression(s), 2 = usage/IO
+error.  CI runs this after the smoke benches; refresh a baseline by
+re-running the bench with ``--json`` on a quiet machine and committing
+the file (see ROADMAP "Telemetry & regression gates").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+EPS = 1e-9
+
+TIMING_SUFFIXES = ("wall_s", "_us")
+# containment, not suffix: "events_per_sec_median" and "speedup_median"
+# are throughput statistics too
+THROUGHPUT_MARKS = ("per_sec", "_rate", "speedup")
+SKIP_KEYS = ("phases",)
+SKIP_SUFFIXES = ("_samples",)
+SKIP_PREFIXES = ("jax.",)
+
+
+def classify(key: str) -> str:
+    if key in SKIP_KEYS or key.endswith(SKIP_SUFFIXES) \
+            or key.startswith(SKIP_PREFIXES):
+        return "skip"
+    if any(m in key for m in THROUGHPUT_MARKS):
+        return "throughput"
+    # timing AFTER throughput: "events_per_sec" must not match "_s"
+    if key.endswith(TIMING_SUFFIXES) or key.endswith("_s"):
+        return "timing"
+    return "exact"
+
+
+class Gate:
+    def __init__(self, tol: float, tol_overrides: Dict[str, float],
+                 skips: List[str]):
+        self.tol = tol
+        self.tol_overrides = tol_overrides
+        self.skips = skips
+        self.checks: List[Tuple[str, str, str]] = []   # (path, status, note)
+        self.failures = 0
+
+    def _emit(self, path: str, status: str, note: str = ""):
+        self.checks.append((path, status, note))
+        if status == "FAIL":
+            self.failures += 1
+
+    def _tol_for(self, path: str) -> float:
+        for sub, t in self.tol_overrides.items():
+            if sub in path:
+                return t
+        return self.tol
+
+    def _skipped(self, path: str) -> bool:
+        return any(sub in path for sub in self.skips)
+
+    def compare(self, base, fresh, path: str = "results"):
+        key = path.rsplit(".", 1)[-1]
+        if self._skipped(path) or classify(key) == "skip":
+            self._emit(path, "skip")
+            return
+        if isinstance(base, dict):
+            if not isinstance(fresh, dict):
+                self._emit(path, "FAIL",
+                           f"baseline is a dict, fresh is "
+                           f"{type(fresh).__name__}")
+                return
+            for k, v in base.items():
+                if k in SKIP_KEYS or k.endswith(SKIP_SUFFIXES) \
+                        or k.startswith(SKIP_PREFIXES):
+                    child = f"{path}.{k}"
+                    if k in fresh:
+                        self._emit(child, "skip")
+                    else:
+                        self._emit(child, "FAIL", "missing in fresh results")
+                    continue
+                child = f"{path}.{k}"
+                if k not in fresh:
+                    self._emit(child, "FAIL", "missing in fresh results")
+                    continue
+                self.compare(v, fresh[k], child)
+            return
+        if isinstance(base, list):
+            # series/samples: schema presence only (lengths may differ
+            # with rep counts); element values are run noise
+            self._emit(path, "skip")
+            return
+        if isinstance(base, bool) or isinstance(base, str):
+            if base != fresh:
+                self._emit(path, "FAIL", f"{base!r} -> {fresh!r}")
+            else:
+                self._emit(path, "ok")
+            return
+        if isinstance(base, (int, float)):
+            if not isinstance(fresh, (int, float)) \
+                    or isinstance(fresh, bool):
+                self._emit(path, "FAIL",
+                           f"baseline number, fresh "
+                           f"{type(fresh).__name__}")
+                return
+            kind = classify(key)
+            if kind == "exact":
+                scale = max(abs(base), abs(fresh), 1.0)
+                if abs(base - fresh) > EPS * scale:
+                    self._emit(path, "FAIL",
+                               f"deterministic metric drifted: "
+                               f"{base} -> {fresh}")
+                else:
+                    self._emit(path, "ok")
+                return
+            tol = self._tol_for(path)
+            band = 1.0 / max(1.0 - tol, 1e-9)
+            if kind == "timing":
+                worse = (fresh / base) if base > 0 else 1.0
+                arrow = f"{base:.4g}s -> {fresh:.4g}s"
+            else:
+                worse = (base / fresh) if fresh > 0 else float("inf")
+                arrow = f"{base:.4g} -> {fresh:.4g}"
+            if worse > band:
+                self._emit(path, "FAIL",
+                           f"{kind} regressed {worse:.2f}x "
+                           f"(allowed {band:.2f}x): {arrow}")
+            else:
+                self._emit(path, "ok", f"{worse:.2f}x of allowed "
+                                       f"{band:.2f}x")
+            return
+        self._emit(path, "skip", f"unhandled type {type(base).__name__}")
+
+
+def load_payload(path: str) -> Dict:
+    with open(path) as f:
+        doc = json.load(f)
+    for k in ("bench", "results"):
+        if k not in doc:
+            raise ValueError(f"{path}: not a write_bench_json payload "
+                             f"(missing {k!r})")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python benchmarks/compare.py",
+        description="Benchmark-trajectory regression gate: compare a "
+                    "fresh --json result against a committed baseline.")
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="freshly produced --json output")
+    ap.add_argument("--tol", type=float, default=0.6,
+                    help="relative tolerance for timing/throughput "
+                         "metrics; the allowed worse-ratio is "
+                         "1/(1-tol) (default 0.6 -> 2.5x)")
+    ap.add_argument("--tol-metric", action="append", default=[],
+                    metavar="SUBSTR=TOL",
+                    help="per-metric tolerance override for any path "
+                         "containing SUBSTR (repeatable)")
+    ap.add_argument("--skip", action="append", default=[],
+                    metavar="SUBSTR",
+                    help="skip any metric path containing SUBSTR "
+                         "(repeatable)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every check, not just failures")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for spec in args.tol_metric:
+        sub, _, t = spec.partition("=")
+        try:
+            overrides[sub] = float(t)
+        except ValueError:
+            print(f"compare: bad --tol-metric {spec!r}", file=sys.stderr)
+            return 2
+    try:
+        base = load_payload(args.baseline)
+        fresh = load_payload(args.fresh)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"compare: {e}", file=sys.stderr)
+        return 2
+    if base["bench"] != fresh["bench"]:
+        print(f"compare: bench mismatch: baseline is "
+              f"{base['bench']!r}, fresh is {fresh['bench']!r}",
+              file=sys.stderr)
+        return 2
+
+    gate = Gate(args.tol, overrides, args.skip)
+    gate.compare(base["results"], fresh["results"])
+
+    n_ok = sum(1 for _, s, _ in gate.checks if s == "ok")
+    n_skip = sum(1 for _, s, _ in gate.checks if s == "skip")
+    for path, status, note in gate.checks:
+        if status == "FAIL" or args.verbose:
+            print(f"[{status:>4}] {path}" + (f"  {note}" if note else ""))
+    verdict = "PASS" if gate.failures == 0 else "FAIL"
+    print(f"[compare] {base['bench']}: {verdict} "
+          f"({n_ok} ok, {n_skip} skipped, {gate.failures} regressed; "
+          f"tol={args.tol})")
+    return 0 if gate.failures == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,7 +8,7 @@ import glob
 import json
 import os
 
-from benchmarks.common import RESULTS_DIR
+from benchmarks.common import RESULTS_DIR, add_json_arg, maybe_write_json
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCH_ORDER = ["granite-20b", "nemotron-4-340b", "phi4-mini-3.8b",
@@ -56,9 +56,30 @@ def render(mesh="16x16", dryrun_dir=None) -> str:
     return "\n".join(lines)
 
 
+def bench_results(mesh="16x16", dryrun_dir=None) -> dict:
+    """``BENCH_roofline.json`` results: one row per (arch, shape) with
+    the analytic roofline scalars (deterministic given the model)."""
+    out = {}
+    for (a, s, m), r in sorted(load(dryrun_dir).items()):
+        if m != mesh:
+            continue
+        row = {"status": r.get("status", "?")}
+        if r.get("status") == "ok":
+            t = r["roofline"]
+            row.update(dominant=t["dominant"],
+                       useful_ratio=t["useful_ratio"],
+                       compute_s=t["compute_s"], memory_s=t["memory_s"],
+                       collective_s=t["collective_s"])
+        out[f"{a}/{s}"] = row
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--dir", default=None)
+    add_json_arg(ap, "roofline")
     a = ap.parse_args()
     print(render(a.mesh, a.dir))
+    maybe_write_json(a, "roofline", bench_results(a.mesh, a.dir),
+                     extra_context={"mesh": a.mesh})

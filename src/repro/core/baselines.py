@@ -39,6 +39,7 @@ from repro.core.aggregation import staleness_merge
 from repro.core.engine import make_engine
 from repro.core.tiering import evaluate_client, tiering
 from repro.fl.metrics import RunHistory
+from repro.obs import flstats
 from repro.obs import telemetry as obs
 
 
@@ -69,6 +70,7 @@ def run_fedavg(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         sel = [int(c) for c in rng.choice(fl.n_clients,
                                           size=min(fl.tau, fl.n_clients),
                                           replace=False)]
+        flstats.record_selection(sel, population=fl.n_clients)
         times = network.delays(sel, rnd)
         params = eng.train_round(params, sel, rnd)
         clock += float(times.max())              # waits for everyone
@@ -115,6 +117,9 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
     clock += max(spent_all)
     m = max(fl.n_clients // fl.n_tiers, 1)
     tiers = tiering(at, m)
+    # TiFL's tiers are STATIC — recorded once, so the migration matrix
+    # of a TiFL trace is empty by construction (the FedDCT contrast).
+    flstats.record_tiering(tiers, population=fl.n_clients)
     n_tiers = len(tiers)
     credits = [fl.rounds // max(n_tiers, 1) + 1] * n_tiers
     tier_acc = [0.0] * n_tiers
@@ -133,10 +138,15 @@ def run_tifl(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         sel = [int(c) for c in rng.choice(members,
                                           size=min(fl.tau, len(members)),
                                           replace=False)]
+        flstats.record_selection([(c, k) for c in sel],
+                                 population=fl.n_clients)
         times, survivors = [], []
         for c, st in zip(sel, network.delays(sel, rnd)):
             times.append(min(st, fl.omega))
+            flstats.record_response(k + 1, float(st), fl.omega,
+                                    timed_out=st >= fl.omega)
             if st >= fl.omega:               # lost this round
+                flstats.record_straggler("dropped", tier=k + 1)
                 continue
             survivors.append(c)
         params = eng.train_round(params, survivors, rnd)
@@ -321,6 +331,7 @@ def run_fedprox(trainer, network, fl: FLConfig, *, prox_mu: float = 0.01,
         sel = [int(c) for c in rng.choice(fl.n_clients,
                                           size=min(fl.tau, fl.n_clients),
                                           replace=False)]
+        flstats.record_selection(sel, population=fl.n_clients)
         times = network.delays(sel, rnd)
         with tel.span("round.train", cohort=len(sel)):
             stacked, sizes = eng.train_clients(params, sel, rnd)

@@ -32,6 +32,7 @@ from repro.core.aggregation import (aggregate_or_keep,
                                     staleness_merge_coefficients,
                                     staleness_weighted_merge,
                                     weighted_average_stacked)
+from repro.obs import flstats
 from repro.obs import telemetry as obs
 
 
@@ -233,6 +234,7 @@ class BatchedClientEngine:
                               padded=len(run_ids)):
                     stacked, _ = self._local_train_cohort(starts, run_ids,
                                                           run_seeds)
+                flstats.record_update_norm(stacked, n)
                 pad = np.zeros(len(run_ids) - n, np.float32)
                 with tel.span("window.merge_scatter", rows=len(run_ids)):
                     return store.merge_scatter(

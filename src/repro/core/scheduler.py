@@ -34,6 +34,7 @@ from repro.core.engine import make_engine
 from repro.core.selection import cstt
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
+from repro.obs import flstats
 from repro.obs import telemetry as obs
 
 
@@ -94,6 +95,9 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         selected, d_max, t_ptr = cstt(
             t_ptr, v_prev, v_curr, tiers, avail_at, ct, fl.tau, fl.beta,
             fl.omega, rng)
+        flstats.record_tiering(tiers, thresholds=d_max,
+                               population=fl.n_clients)
+        flstats.record_selection(selected)
 
         # ---- virtual delays decide survivors BEFORE any training ------
         survivors: List[int] = []
@@ -102,9 +106,12 @@ def run_feddct(trainer, network, fl: FLConfig, *, use_kernel_agg: bool = False,
         sts = network.delays([c for c, _ in selected], rnd)
         for (c, k), st in zip(selected, sts):
             times_per_tier.setdefault(k, []).append(min(st, d_max[k]))
+            flstats.record_response(k + 1, float(st), d_max[k],
+                                    timed_out=st >= d_max[k])
             if st >= d_max[k]:
                 # straggler: drop update, enter evaluation lane
                 n_straggle += 1
+                flstats.record_straggler("dropped", tier=k + 1)
                 new_at, spent = evaluate_client(network, c, rnd, fl.kappa,
                                                 fl.omega)
                 eval_lane[c] = (clock + spent, new_at)

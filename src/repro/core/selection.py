@@ -45,6 +45,42 @@ def tier_timeouts(tiers: List[List[int]], at: Dict[int, float], beta: float,
     return outs
 
 
+def gini(counts: Sequence[float]) -> float:
+    """Gini coefficient of a participation-count vector (0 = perfectly
+    even, -> 1 = one client takes everything).  Zero-count clients must
+    be INCLUDED for the number to mean selection fairness."""
+    x = np.sort(np.asarray(list(counts), np.float64))
+    n = x.size
+    total = float(x.sum())
+    if n == 0 or total <= 0:
+        return 0.0
+    cum = np.cumsum(x)
+    return float((n + 1 - 2.0 * float((cum / total).sum())) / n)
+
+
+def participation_fairness(counts: Dict[int, float],
+                           population: int = 0) -> Dict[str, float]:
+    """Selection-fairness summary over per-client participation counts.
+
+    ``counts`` maps client -> times selected/merged; clients missing
+    from it were never picked.  ``population`` (total client count, 0 =
+    unknown) pads the vector with the never-selected clients so Gini
+    and coverage describe the whole fleet, not just the winners.
+    Returns ``gini``, ``coverage`` (fraction selected at least once),
+    ``min``/``max``/``mean`` counts over the padded vector.
+    """
+    vals = [float(v) for v in counts.values()]
+    n = max(int(population), len(vals))
+    vec = vals + [0.0] * (n - len(vals))
+    if not vec:
+        return {"gini": 0.0, "coverage": 0.0, "min": 0.0, "max": 0.0,
+                "mean": 0.0, "population": 0}
+    nonzero = sum(1 for v in vec if v > 0)
+    return {"gini": gini(vec), "coverage": nonzero / n,
+            "min": float(min(vec)), "max": float(max(vec)),
+            "mean": float(np.mean(vec)), "population": n}
+
+
 def cstt(t: int, v_prev: float, v_now: float, tiers: List[List[int]],
          at: Dict[int, float], ct: Dict[int, int], tau: int, beta: float,
          omega: float, rng: np.random.Generator

@@ -78,6 +78,12 @@ def main(argv=None):
                          "event log (repro.obs.validate checks it); "
                          "'chrome' = trace_event JSON for "
                          "chrome://tracing / Perfetto")
+    ap.add_argument("--report", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="print the per-tier FL run report after the run "
+                         "(implies tracing even without --trace); with a "
+                         "PATH also write the structured report JSON "
+                         "there (see python -m repro.obs.report)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -104,15 +110,27 @@ def main(argv=None):
                                              "feddct_async"):
         kw["store_capacity"] = args.hot_rows
         kw["store_cold_dir"] = args.cold_dir
-    if args.trace:
+    if args.trace or args.report is not None:
         from repro import obs
         with obs.tracing() as tel:
             hist = run_method(args.method, trainer, net, fl, **kw)
-        if args.trace_format == "chrome":
-            tel.export_chrome(args.trace)
-        else:
-            tel.export_jsonl(args.trace)
-        print(f"[fl_train] trace ({args.trace_format}) -> {args.trace}")
+        if args.trace:
+            if args.trace_format == "chrome":
+                tel.export_chrome(args.trace)
+            else:
+                tel.export_jsonl(args.trace)
+            print(f"[fl_train] trace ({args.trace_format}) -> {args.trace}")
+        if args.report is not None:
+            import json as _json
+
+            from repro.obs import report as obs_report
+            rep = obs_report.build_report(hist.meta["telemetry"],
+                                          hist.to_json())
+            print(obs_report.format_report(rep, source=args.method))
+            if args.report != "-":
+                with open(args.report, "w") as f:
+                    _json.dump(rep, f, indent=2, sort_keys=True)
+                print(f"[fl_train] report json -> {args.report}")
     else:
         hist = run_method(args.method, trainer, net, fl, **kw)
     if hist.accuracy:

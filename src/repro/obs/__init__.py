@@ -19,6 +19,11 @@ Users enable tracing around a run and export afterwards:
 
 or from the CLI: ``fl_train.py --trace PATH [--trace-format
 jsonl|chrome]``.
+
+FL-semantic labeled streams (per-tier / per-client diagnostics) live in
+``repro.obs.flstats``; ``repro.obs.report`` folds a trace or a
+``RunHistory`` JSON into the paper-Table-2-style per-tier report
+(``python -m repro.obs.report``).
 """
 
 from repro.obs.telemetry import (NOOP, SCHEMA_VERSION, NoopTelemetry,

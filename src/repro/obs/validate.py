@@ -1,15 +1,20 @@
-"""Validate a JSONL telemetry trace against the export schema.
+"""Validate an exported telemetry trace against its schema.
 
     PYTHONPATH=src python -m repro.obs.validate trace.jsonl
+    PYTHONPATH=src python -m repro.obs.validate --format chrome trace.json
 
-Exit 0 when the file is a well-formed trace (meta header first, every
-line a known record type with its required keys); exit 2 with a
-per-line diagnostic otherwise.  CI runs this on the traced
-``fl_train`` smoke before uploading the trace artifact.
+``--format`` is ``jsonl`` (line-delimited event log), ``chrome``
+(trace_event JSON as written by ``export_chrome``), or ``auto`` (the
+default: a file whose first byte opens a JSON object containing
+``traceEvents`` is chrome, else JSONL).  Exit 0 when the file is a
+well-formed trace; exit 2 with diagnostics otherwise.  CI runs this on
+BOTH formats of the traced ``fl_train`` smoke before uploading the
+trace artifacts.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from typing import List, Tuple
@@ -71,20 +76,125 @@ def validate_file(path: str) -> Tuple[List[str], dict]:
         return validate_lines(f)
 
 
+# ---------------------------------------------------------------------------
+# chrome trace_event format (export_chrome)
+# ---------------------------------------------------------------------------
+
+# required keys per chrome event phase we emit ("M" metadata, "X"
+# complete span, "C" counter track)
+CHROME_PHASES = {
+    "M": ("name", "pid", "tid", "args"),
+    "X": ("name", "ph", "pid", "tid", "ts", "dur", "args"),
+    "C": ("name", "ph", "pid", "tid", "ts", "args"),
+}
+
+
+def validate_chrome(doc) -> Tuple[List[str], dict]:
+    """-> (errors, counts-by-phase); empty errors == valid trace."""
+    errors: List[str] = []
+    counts = {ph: 0 for ph in CHROME_PHASES}
+    if not isinstance(doc, dict):
+        return [f"top level must be a JSON object, got "
+                f"{type(doc).__name__}"], counts
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        errors.append("missing traceEvents list")
+        events = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph", "M")
+        if ph not in CHROME_PHASES:
+            errors.append(f"event {i}: unknown phase {ev.get('ph')!r}")
+            continue
+        counts[ph] += 1
+        missing = [k for k in CHROME_PHASES[ph] if k not in ev]
+        if missing:
+            errors.append(f"event {i}: {ph} event missing {missing}")
+            continue
+        if ph == "X":
+            args = ev["args"]
+            if not isinstance(args, dict) \
+                    or "vt0" not in args or "vt1" not in args:
+                errors.append(f"event {i}: X event args must carry the "
+                              f"virtual-time interval (vt0/vt1)")
+    other = doc.get("otherData")
+    if not isinstance(other, dict):
+        errors.append("missing otherData object")
+    else:
+        if other.get("schema_version") != SCHEMA_VERSION:
+            errors.append(f"otherData.schema_version "
+                          f"{other.get('schema_version')!r} "
+                          f"!= {SCHEMA_VERSION}")
+        if not isinstance(other.get("counters"), dict):
+            errors.append("otherData.counters must be an object")
+        summary = other.get("summary")
+        if not isinstance(summary, dict):
+            errors.append("missing otherData.summary object")
+        else:
+            missing = [k for k in REQUIRED["summary"] if k not in summary]
+            if missing:
+                errors.append(f"otherData.summary missing {missing}")
+    if counts["X"] == 0:
+        errors.append("trace contains no spans (X events)")
+    return errors, counts
+
+
+def validate_chrome_file(path: str) -> Tuple[List[str], dict]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except json.JSONDecodeError as e:
+        return [f"not a JSON document ({e})"], {}
+    return validate_chrome(doc)
+
+
+def sniff_format(path: str) -> str:
+    """"chrome" when the file is one JSON object with ``traceEvents``,
+    else "jsonl"."""
+    with open(path) as f:
+        head = f.read(4096)
+    if head.lstrip().startswith("{"):
+        try:
+            first = json.loads(head.splitlines()[0])
+            if isinstance(first, dict) and first.get("type") in JSONL_TYPES:
+                return "jsonl"
+        except json.JSONDecodeError:
+            pass
+        return "chrome"
+    return "jsonl"
+
+
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 1:
-        print("usage: python -m repro.obs.validate TRACE.jsonl",
-              file=sys.stderr)
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.validate",
+        description="Validate an exported telemetry trace (JSONL event "
+                    "log or Chrome trace_event JSON).")
+    ap.add_argument("path", help="trace file to validate")
+    ap.add_argument("--format", default="auto",
+                    choices=["auto", "jsonl", "chrome"],
+                    help="trace format (auto = sniff: a JSON object "
+                         "with traceEvents is chrome, else jsonl)")
+    args = ap.parse_args(argv)
+    fmt = args.format
+    try:
+        if fmt == "auto":
+            fmt = sniff_format(args.path)
+        if fmt == "chrome":
+            errors, counts = validate_chrome_file(args.path)
+        else:
+            errors, counts = validate_file(args.path)
+    except OSError as e:
+        print(f"[validate] cannot read {args.path}: {e}", file=sys.stderr)
         return 2
-    errors, counts = validate_file(argv[0])
     if errors:
         for e in errors:
             print(f"[validate] {e}", file=sys.stderr)
-        print(f"[validate] {argv[0]}: INVALID ({len(errors)} error(s))",
-              file=sys.stderr)
+        print(f"[validate] {args.path} ({fmt}): INVALID "
+              f"({len(errors)} error(s))", file=sys.stderr)
         return 2
-    print(f"[validate] {argv[0]}: OK  "
+    print(f"[validate] {args.path} ({fmt}): OK  "
           + "  ".join(f"{t}={n}" for t, n in counts.items() if n))
     return 0
 

@@ -44,6 +44,7 @@ from repro.core.selection import cstt
 from repro.core.state import ClientStateStore
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
+from repro.obs import flstats
 from repro.obs import telemetry as obs
 from repro.runtime.buffer import AggregationBuffer
 from repro.runtime.events import ClientEvent, EventQueue
@@ -285,6 +286,10 @@ class AsyncRunner:
                     store.prefetch([e.client for e in upcoming],
                                    keep=[e.client for e in batch])
                 prev_peek = {e.client for e in upcoming}
+            if tel.enabled:
+                flstats.record_staleness(
+                    [version + i - e.version for i, e in enumerate(batch)])
+                flstats.record_client_updates([e.client for e in batch])
             with tel.span("window.merge", cohort=len(batch)):
                 if store is not None:
                     # the merged clients' snapshot rows are re-scattered
@@ -413,21 +418,31 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
             selected, d_max, t_ptr = cstt(
                 t_ptr, v_prev, v_curr, tiers, avail_at, ct, fl.tau,
                 fl.beta, fl.omega, rng)
+            flstats.record_tiering(
+                tiers, thresholds=[min(d, fl.omega) for d in d_max],
+                population=fl.n_clients)
+            flstats.record_selection(selected)
             sts = network.delays([c for c, _ in selected], rnd)
-            used = set()
+            used = {k for _, k in selected}
+            if used:
+                deadline = clock + max(min(d_max[k], fl.omega)
+                                       for k in used)
             for (c, k), st in zip(selected, sts):
                 q.push(ClientEvent(clock + float(st), c, version, rnd,
                                    cost=float(st)))
                 if store is None:
                     snapshots[c] = params
                 inflight[c] = k
-                used.add(k)
+                # a client whose completion lands past the round's
+                # window deadline is this design's "timeout hit" — it
+                # is carried, not dropped, but it missed its tier's
+                # response budget all the same.
+                flstats.record_response(
+                    k + 1, float(st), min(d_max[k], fl.omega),
+                    timed_out=clock + float(st) > deadline)
             if store is not None and selected:
                 # one scatter snapshots the whole selection at once
                 store.scatter_params([c for c, _ in selected], params)
-            if used:
-                deadline = clock + max(min(d_max[k], fl.omega)
-                                       for k in used)
             n_sel = len(selected)
             sel_span.end()
 
@@ -452,6 +467,17 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
             carried = sum(1 for e in batch if e.rnd < rnd)
             if carried:
                 tel.inc("stragglers.carried", carried)
+            if tel.enabled:
+                tiers_of = [inflight[e.client] + 1
+                            if e.client in inflight else None
+                            for e in batch]
+                flstats.record_staleness(
+                    [version + i - e.version for i, e in enumerate(batch)],
+                    tiers_of)
+                flstats.record_client_updates([e.client for e in batch])
+                for e, t in zip(batch, tiers_of):
+                    if e.rnd < rnd:
+                        flstats.record_straggler("carried", tier=t)
             with tel.span("window.merge", cohort=len(batch)):
                 if store is not None:
                     params = _merge_window_store(eng, store, params, batch,

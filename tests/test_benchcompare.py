@@ -1,0 +1,163 @@
+"""Bench-trajectory regression gate (benchmarks/compare.py): exit
+codes, direction-aware tolerance bands, strict schema, and the
+committed baselines gating against themselves."""
+
+from __future__ import annotations
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "benchmarks")
+sys.path.insert(0, BENCH_DIR)
+
+import compare  # noqa: E402  (benchmarks/ is script-style, not a package)
+
+
+def _payload():
+    return {
+        "bench": "async",
+        "context": {"argv": ["--smoke", "--json"]},
+        "results": {
+            "sequential": {
+                "wall_s": 0.10, "events": 16, "events_per_sec": 160.0,
+                "events_per_sec_median": 150.0,
+                "events_per_sec_samples": [140.0, 150.0, 160.0],
+                "n_drains": 16, "virtual_time": 10.5,
+                "store_path": "dict",
+                "phases": {"phase_s": {"run": 0.1}, "counters": {}},
+            },
+            "speedup": 1.4,
+            "histories_identical": True,
+        },
+    }
+
+
+def _write(tmp_path, name, doc):
+    p = str(tmp_path / name)
+    with open(p, "w") as f:
+        json.dump(doc, f)
+    return p
+
+
+def _run(tmp_path, base, fresh, *extra):
+    bp = _write(tmp_path, "base.json", base)
+    fp = _write(tmp_path, "fresh.json", fresh)
+    return compare.main([bp, fp, *extra])
+
+
+def test_identical_passes(tmp_path):
+    assert _run(tmp_path, _payload(), _payload()) == 0
+
+
+def test_throughput_regression_fails(tmp_path):
+    fresh = _payload()
+    fresh["results"]["sequential"]["events_per_sec_median"] /= 10.0
+    assert _run(tmp_path, _payload(), fresh) == 1
+
+
+def test_throughput_within_band_passes(tmp_path):
+    fresh = _payload()
+    # 2x worse is inside the default 2.5x band
+    fresh["results"]["sequential"]["events_per_sec_median"] /= 2.0
+    fresh["results"]["sequential"]["events_per_sec"] /= 2.0
+    fresh["results"]["speedup"] /= 2.0
+    assert _run(tmp_path, _payload(), fresh) == 0
+
+
+def test_timing_regression_fails_and_improvement_passes(tmp_path):
+    fresh = _payload()
+    fresh["results"]["sequential"]["wall_s"] *= 3.0      # 3x slower
+    assert _run(tmp_path, _payload(), fresh) == 1
+    better = _payload()
+    better["results"]["sequential"]["wall_s"] /= 10.0    # faster never fails
+    better["results"]["sequential"]["events_per_sec"] *= 10.0
+    assert _run(tmp_path, _payload(), better) == 0
+
+
+def test_deterministic_drift_fails(tmp_path):
+    fresh = _payload()
+    fresh["results"]["sequential"]["events"] = 17        # seeded count moved
+    assert _run(tmp_path, _payload(), fresh) == 1
+    fresh = _payload()
+    fresh["results"]["sequential"]["virtual_time"] = 11.0
+    assert _run(tmp_path, _payload(), fresh) == 1
+
+
+def test_bool_and_string_exact(tmp_path):
+    fresh = _payload()
+    fresh["results"]["histories_identical"] = False
+    assert _run(tmp_path, _payload(), fresh) == 1
+    fresh = _payload()
+    fresh["results"]["sequential"]["store_path"] = "store"
+    assert _run(tmp_path, _payload(), fresh) == 1
+
+
+def test_schema_strictness(tmp_path):
+    # baseline key missing from fresh -> regression
+    fresh = _payload()
+    del fresh["results"]["speedup"]
+    assert _run(tmp_path, _payload(), fresh) == 1
+    # extra fresh keys are fine (new metrics need no baseline refresh)
+    fresh = _payload()
+    fresh["results"]["new_metric"] = 42.0
+    assert _run(tmp_path, _payload(), fresh) == 0
+
+
+def test_noise_fields_are_skipped(tmp_path):
+    fresh = _payload()
+    fresh["results"]["sequential"]["phases"] = {"totally": "different"}
+    fresh["results"]["sequential"]["events_per_sec_samples"] = [1.0]
+    assert _run(tmp_path, _payload(), fresh) == 0
+    # ... but a vanished phases block is still a schema regression
+    fresh = _payload()
+    del fresh["results"]["sequential"]["phases"]
+    assert _run(tmp_path, _payload(), fresh) == 1
+
+
+def test_tol_override_and_skip(tmp_path):
+    fresh = _payload()
+    fresh["results"]["sequential"]["events_per_sec_median"] /= 4.0
+    assert _run(tmp_path, _payload(), fresh) == 1
+    assert _run(tmp_path, _payload(), fresh,
+                "--tol-metric", "events_per_sec_median=0.9") == 0
+    assert _run(tmp_path, _payload(), fresh,
+                "--skip", "events_per_sec_median") == 0
+
+
+def test_usage_errors_exit_2(tmp_path):
+    other = _payload()
+    other["bench"] = "store"
+    assert _run(tmp_path, _payload(), other) == 2       # bench mismatch
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        f.write("{not json")
+    good = _write(tmp_path, "good.json", _payload())
+    assert compare.main([good, bad]) == 2
+    assert compare.main([str(tmp_path / "missing.json"), good]) == 2
+    notbench = _write(tmp_path, "nb.json", {"results": {}})
+    assert compare.main([notbench, good]) == 2
+
+
+def test_classify():
+    assert compare.classify("wall_s") == "timing"
+    assert compare.classify("stack_us") == "timing"
+    assert compare.classify("events_per_sec") == "throughput"
+    assert compare.classify("events_per_sec_median") == "throughput"
+    assert compare.classify("speedup_median") == "throughput"
+    assert compare.classify("rows_per_sec") == "throughput"
+    assert compare.classify("events") == "exact"
+    assert compare.classify("virtual_time") == "exact"
+    assert compare.classify("phases") == "skip"
+    assert compare.classify("events_per_sec_samples") == "skip"
+    assert compare.classify("jax.compiles") == "skip"
+
+
+@pytest.mark.parametrize("name", ["BENCH_async.json", "BENCH_store.json"])
+def test_committed_baselines_gate_against_themselves(name):
+    p = os.path.join(BENCH_DIR, name)
+    assert compare.main([p, p]) == 0

@@ -15,10 +15,15 @@ import pytest
 from repro import obs
 from repro.config.base import FLConfig
 from repro.core import run_method
+from repro.core.tiering import tiering
 from repro.fl.network import WirelessNetwork
 from repro.fl.testing import SyntheticCohortTrainer
+from repro.obs import flstats
+from repro.obs import report as obs_report
 from repro.obs import telemetry as obs_tel
-from repro.obs.validate import validate_file, validate_lines
+from repro.obs.validate import (sniff_format, validate_chrome,
+                                validate_chrome_file, validate_file,
+                                validate_lines)
 
 
 def _net(fl):
@@ -223,12 +228,15 @@ CASES = [
     ("fedbuff", dict(eval_every=2), None),
     ("feddct_async", dict(), None),
     ("feddct_async", dict(), 2),
+    ("feddct", dict(), None),
+    ("tifl", dict(), None),
 ]
 
 
 @pytest.mark.parametrize("method,kw,capacity", CASES,
                          ids=["fedasync-window", "fedbuff",
-                              "feddct_async-dense", "feddct_async-tiered"])
+                              "feddct_async-dense", "feddct_async-tiered",
+                              "feddct-sync", "tifl-sync"])
 def test_tracing_is_numerically_invisible(method, kw, capacity):
     """Bit-identical RunHistories with tracing on vs off; the traced
     meta differs ONLY by the additive ``telemetry`` block."""
@@ -332,3 +340,274 @@ def test_prefetch_hit_rate_surfaces_when_windows_fit():
     assert demand > 0, c
     assert "prefetch_hit_rate" in t["rates"]
     assert 0.0 <= t["rates"]["prefetch_hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# flstats: labeled FL-semantic streams
+# ---------------------------------------------------------------------------
+
+def test_label_roundtrip():
+    assert flstats.label("fl.tier.size") == "fl.tier.size"
+    name = flstats.label("fl.tier.migration", to=2, **{"from": 1})
+    assert name == "fl.tier.migration{from=1,to=2}"   # sorted keys
+    base, labels = flstats.parse_label(name)
+    assert base == "fl.tier.migration"
+    assert labels == {"from": "1", "to": "2"}
+    assert flstats.parse_label("plain.counter") == ("plain.counter", {})
+
+
+def test_flstats_disabled_is_inert():
+    """Every record_* early-returns on the NOOP singleton (which has
+    __slots__, so any state leak would raise)."""
+    assert obs_tel.TEL is obs_tel.NOOP
+    flstats.record_tiering([[0, 1]], thresholds=[1.0], population=2)
+    flstats.record_selection([(0, 0), 1])
+    flstats.record_response(1, 1.0, 2.0, timed_out=False)
+    flstats.record_staleness([1, 2], [1, None])
+    flstats.record_straggler("dropped", tier=1)
+    flstats.record_client_updates([0, 1])
+    flstats.record_update_norm(None, 0)
+
+
+def test_flstats_cardinality_cap(monkeypatch):
+    monkeypatch.setattr(flstats, "MAX_LABELS_PER_METRIC", 2)
+    with obs.tracing() as tel:
+        for t in range(5):
+            flstats.record_response(t + 1, 1.0, 2.0, timed_out=False)
+    admitted = [k for k in tel.hists if k.startswith("fl.response_s{")]
+    assert len(admitted) == 2
+    assert tel.counters[flstats.DROPPED] > 0
+    # a fresh tracing block starts a fresh label budget
+    with obs.tracing() as tel2:
+        flstats.record_response(9, 1.0, 2.0, timed_out=False)
+    assert "fl.response_s{tier=9}" in tel2.hists
+    assert flstats.DROPPED not in tel2.counters
+
+
+def test_flstats_migration_matrix_seeded_drift():
+    """Satellite gate: a deterministic drifting-response scenario
+    produces the hand-checked migration-matrix entries and per-tier
+    threshold series (client 0 then client 1 slow down and sink from
+    tier 1 to tier 2, displacing the fast ones upward)."""
+    from repro.core.selection import tier_timeouts
+    ats = [
+        {0: 1.0, 1: 2.0, 2: 3.0, 3: 4.0},   # [[0,1],[2,3]]
+        {0: 5.0, 1: 2.0, 2: 3.0, 3: 4.0},   # [[1,2],[3,0]]
+        {0: 5.0, 1: 6.0, 2: 3.0, 3: 4.0},   # [[2,3],[0,1]]
+    ]
+    with obs.tracing() as tel:
+        for at in ats:
+            tiers = tiering(at, 2)
+            flstats.record_tiering(
+                tiers, thresholds=tier_timeouts(tiers, at, beta=2.0,
+                                                omega=100.0),
+                population=4)
+    c = tel.counters
+    assert c["fl.tier.migration{from=1,to=2}"] == 2
+    assert c["fl.tier.migration{from=2,to=1}"] == 2
+    assert c["fl.tier.rounds"] == 3
+    assert tel.gauges["fl.population"] == 4.0
+    # membership + threshold series: one point per round per tier
+    for t in (1, 2):
+        assert len(tel.gauge_series[f"fl.tier.size{{tier={t}}}"]) == 3
+        assert len(tel.gauge_series[f"fl.tier.threshold_s{{tier={t}}}"]) == 3
+    # Eq. 7 thresholds (beta * tier mean): hand-computed series
+    assert tel.hists["fl.threshold_s{tier=1}"] == [3.0, 5.0, 7.0]
+    assert tel.hists["fl.threshold_s{tier=2}"] == [7.0, 9.0, 11.0]
+
+
+def test_flstats_response_and_straggler_streams():
+    with obs.tracing() as tel:
+        flstats.record_response(1, 3.0, 4.0, timed_out=False)
+        flstats.record_response(1, 5.0, 4.0, timed_out=True)
+        flstats.record_response(2, 8.0, 10.0, timed_out=False)
+        flstats.record_straggler("dropped", tier=1)
+        flstats.record_straggler("carried", tier=2, n=2)
+        flstats.record_staleness([0, 3], [1, 2])
+        flstats.record_selection([(4, 0), (5, 1), 6], population=8)
+        flstats.record_client_updates([4, 5])
+    c = tel.counters
+    assert c["fl.tier.participate{tier=1}"] == 1
+    assert c["fl.tier.timeout{tier=1}"] == 1
+    assert c["fl.tier.participate{tier=2}"] == 1
+    assert c["fl.straggler.dropped{tier=1}"] == 1
+    assert c["fl.straggler.carried{tier=2}"] == 2
+    assert c["fl.tier.selected{tier=1}"] == 1
+    assert c["fl.tier.selected{tier=2}"] == 1
+    assert c["fl.client.selected{client=6}"] == 1
+    assert c["fl.client.update{client=4}"] == 1
+    assert tel.hists["fl.response_s{tier=1}"] == [3.0, 5.0]
+    assert tel.hists["fl.response_frac{tier=1}"] == [0.75, 1.25]
+    assert tel.hists["fl.staleness"] == [0.0, 3.0]
+    assert tel.hists["fl.staleness{tier=2}"] == [3.0]
+    assert tel.gauges["fl.population"] == 8.0
+
+
+# ---------------------------------------------------------------------------
+# report: per-tier run report from traces / histories
+# ---------------------------------------------------------------------------
+
+def _traced_async_run(fl=None, **kw):
+    fl = fl or _fl(rounds=4)
+    with obs.tracing() as tel:
+        hist = run_method("feddct_async", SyntheticCohortTrainer(),
+                          _net(fl), fl, **kw)
+    return fl, tel, hist
+
+
+def test_flstats_report_acceptance_feddct_async():
+    """Acceptance gate: a traced tiered feddct_async run yields a
+    report with per-tier participation counts, timeout-hit rates, and
+    the migration matrix, all consistent with the raw counters."""
+    fl, tel, hist = _traced_async_run(store_capacity=4)
+    t = hist.meta["telemetry"]
+    c = t["counters"]
+    rep = obs_report.build_report(t, hist.to_json())
+
+    assert rep["rounds"] == c["fl.tier.rounds"] > 0
+    assert rep["population"] == fl.n_clients
+    assert rep["tiers"], "per-tier table is empty"
+    for tier, row in rep["tiers"].items():
+        assert row["selected"] == c.get(f"fl.tier.selected{{tier={tier}}}",
+                                        0)
+        seen = row["participated"] + row["timeout_hits"]
+        if seen:
+            assert row["timeout_hit_rate"] == pytest.approx(
+                row["timeout_hits"] / seen)
+        if "mean_response_s" in row:
+            assert row["mean_response_s"] > 0
+    total_sel = sum(r["selected"] for r in rep["tiers"].values())
+    client_sel = sum(v for k, v in c.items()
+                     if k.startswith("fl.client.selected{"))
+    assert total_sel == client_sel > 0
+    # migration matrix mirrors the labeled counters
+    mig = sum(v for k, v in c.items()
+              if k.startswith("fl.tier.migration{"))
+    assert rep["n_migrations"] == mig
+    # fairness over the whole fleet
+    f = rep["fairness"]["selection"]
+    assert f["population"] == fl.n_clients
+    assert 0.0 <= f["gini"] <= 1.0
+    assert 0.0 < f["coverage"] <= 1.0
+    # staleness + cohort update norms flowed through
+    assert "fl.staleness" in t["hists"]
+    assert "cohort_update_norm" in rep
+    # trajectory came from the history
+    assert rep["trajectory"]["evals"] == len(hist.accuracy)
+    # the text rendering mentions every tier row
+    text = obs_report.format_report(rep, source="test")
+    for tier in rep["tiers"]:
+        assert f"\n{tier:>4}  " in text or str(tier) in text
+
+
+def test_report_sources_agree(tmp_path):
+    """The three report sources (JSONL trace, chrome trace, RunHistory
+    JSON) produce the same per-tier table."""
+    _, tel, hist = _traced_async_run()
+    jp = str(tmp_path / "t.jsonl")
+    cp = str(tmp_path / "t.json")
+    hp = str(tmp_path / "h.json")
+    tel.export_jsonl(jp)
+    tel.export_chrome(cp)
+    hist.save(hp)
+    reports = []
+    for p in (jp, cp, hp):
+        summary, history = obs_report.load_source(p)
+        assert summary is not None, p
+        reports.append(obs_report.build_report(summary, history))
+    assert reports[0]["tiers"] == reports[1]["tiers"] == reports[2]["tiers"]
+    assert (reports[0]["migration_matrix"]
+            == reports[1]["migration_matrix"]
+            == reports[2]["migration_matrix"])
+    # only the history source carries the trajectory
+    assert "trajectory" not in reports[0]
+    assert reports[2]["trajectory"]["evals"] == len(hist.accuracy)
+
+
+def test_report_cli(tmp_path, capsys):
+    _, tel, hist = _traced_async_run()
+    jp = str(tmp_path / "t.jsonl")
+    tel.export_jsonl(jp)
+    out_json = str(tmp_path / "rep.json")
+    assert obs_report.main([jp, "--json", out_json]) == 0
+    text = capsys.readouterr().out
+    assert "FL run report" in text
+    rep = json.load(open(out_json))
+    assert rep["tiers"]
+    # an untraced input is a clean exit-2 diagnostic, not a crash
+    hp = str(tmp_path / "h.json")
+    hist.meta.pop("telemetry")
+    hist.save(hp)
+    assert obs_report.main([hp]) == 2
+    bogus = str(tmp_path / "x.json")
+    with open(bogus, "w") as f:
+        f.write("{not json")
+    assert obs_report.main([bogus]) == 2
+
+
+# ---------------------------------------------------------------------------
+# trace-format parity + chrome validation
+# ---------------------------------------------------------------------------
+
+def test_trace_format_parity(tmp_path):
+    """Satellite gate: the end-of-run aggregate folded into
+    ``RunHistory.meta["telemetry"]`` is identical to what BOTH export
+    formats embed (only ``wall_s`` differs — it is stamped at export
+    time)."""
+    _, tel, hist = _traced_async_run()
+    jp = str(tmp_path / "t.jsonl")
+    cp = str(tmp_path / "t.json")
+    tel.export_jsonl(jp)
+    tel.export_chrome(cp)
+    with open(jp) as f:
+        jsonl_summary = [json.loads(l) for l in f if l.strip()][-1]
+    assert jsonl_summary.pop("type") == "summary"
+    chrome_summary = json.load(open(cp))["otherData"]["summary"]
+    meta_summary = hist.meta["telemetry"]
+    for key in ("spans", "counters", "gauges", "hists"):
+        assert jsonl_summary[key] == meta_summary[key], key
+        assert chrome_summary[key] == meta_summary[key], key
+    assert jsonl_summary.get("rates") == meta_summary.get("rates") \
+        == chrome_summary.get("rates")
+
+
+def test_chrome_validator(tmp_path):
+    tel = _tiny_trace()
+    p = str(tmp_path / "t.json")
+    tel.export_chrome(p)
+    errors, counts = validate_chrome_file(p)
+    assert errors == []
+    assert counts["X"] == 2 and counts["M"] == 2
+    assert sniff_format(p) == "chrome"
+    jp = str(tmp_path / "t.jsonl")
+    tel.export_jsonl(jp)
+    assert sniff_format(jp) == "jsonl"
+
+
+def test_chrome_validator_rejects_corrupt():
+    assert validate_chrome([])[0]                       # not an object
+    assert any("traceEvents" in e for e in validate_chrome({})[0])
+    ok = {"traceEvents": [
+        {"name": "x", "ph": "X", "pid": 0, "tid": 0, "ts": 0.0,
+         "dur": 1.0, "args": {"vt0": 0.0, "vt1": 0.0}}],
+        "otherData": {"schema_version": obs.SCHEMA_VERSION,
+                      "counters": {},
+                      "summary": {"wall_s": 0.1, "spans": {},
+                                  "counters": {}}}}
+    assert validate_chrome(ok)[0] == []
+    # X span without the virtual-time interval
+    bad = json.loads(json.dumps(ok))
+    bad["traceEvents"][0]["args"] = {}
+    assert any("vt0" in e for e in validate_chrome(bad)[0])
+    # wrong schema version
+    bad = json.loads(json.dumps(ok))
+    bad["otherData"]["schema_version"] = 99
+    assert any("schema_version" in e for e in validate_chrome(bad)[0])
+    # no spans at all
+    bad = json.loads(json.dumps(ok))
+    bad["traceEvents"] = []
+    assert any("no spans" in e for e in validate_chrome(bad)[0])
+    # summary missing required keys
+    bad = json.loads(json.dumps(ok))
+    bad["otherData"]["summary"] = {}
+    assert any("summary missing" in e for e in validate_chrome(bad)[0])

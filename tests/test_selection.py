@@ -59,3 +59,34 @@ def test_cstt_selects_from_all_tiers_up_to_t():
     assert tiers_used == {0, 1}
     assert len(sel) == 4                     # tau from each tier
     assert len(dmax) == 3
+
+
+def test_gini_known_values():
+    from repro.core.selection import gini
+
+    assert gini([]) == 0.0
+    assert gini([0, 0, 0]) == 0.0                 # no participation at all
+    assert gini([5, 5, 5, 5]) == pytest.approx(0.0)
+    assert gini([0, 0, 0, 10]) == pytest.approx(0.75)   # one winner: (n-1)/n
+    assert 0.0 < gini([1, 2, 3, 4]) < 0.5
+    # scale invariance
+    assert gini([1, 2, 3]) == pytest.approx(gini([10, 20, 30]))
+
+
+def test_participation_fairness_pads_population():
+    from repro.core.selection import participation_fairness
+
+    f = participation_fairness({0: 2, 1: 2}, population=4)
+    assert f["population"] == 4
+    assert f["coverage"] == pytest.approx(0.5)
+    assert f["min"] == 0.0 and f["max"] == 2.0
+    assert f["mean"] == pytest.approx(1.0)
+    assert f["gini"] == pytest.approx(0.5)
+    # unknown population: the counts dict IS the fleet
+    g = participation_fairness({0: 1, 1: 1})
+    assert g["population"] == 2 and g["coverage"] == 1.0
+    assert g["gini"] == pytest.approx(0.0)
+    # empty
+    e = participation_fairness({})
+    assert e == {"gini": 0.0, "coverage": 0.0, "min": 0.0, "max": 0.0,
+                 "mean": 0.0, "population": 0}

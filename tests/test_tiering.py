@@ -58,3 +58,45 @@ def test_evaluate_deterministic():
     a = evaluate_client(net, 2, rnd=5, kappa=2, omega=30.0)
     b = evaluate_client(net, 2, rnd=5, kappa=2, omega=30.0)
     assert a == b
+
+
+def test_migration_tracker_counts_reassignments():
+    from repro.core.tiering import TierMigrationTracker, assignment
+
+    assert assignment([[0, 1], [2, 3]]) == {0: 1, 1: 1, 2: 2, 3: 2}
+    tr = TierMigrationTracker()
+    assert tr.update([[0, 1], [2, 3]]) == {}    # first round has no prior
+    assert tr.update([[0, 2], [1, 3]]) == {(1, 2): 1, (2, 1): 1}
+    # absent clients (in flight / eval lane) keep their last tier:
+    # no phantom migrations while 1 and 2 sit out
+    assert tr.update([[0], [3]]) == {}
+    # a returning client's move is measured from its LAST seen tier
+    assert tr.update([[0, 1], [3, 2]]) == {(1, 2): 1, (2, 1): 1}
+    assert tr.matrix == {(1, 2): 2, (2, 1): 2}
+    assert tr.n_migrations() == 4
+    assert tr.rounds == 4
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_migration_tracker_matches_assignment_diffs(seed):
+    from repro.core.tiering import TierMigrationTracker, assignment
+
+    gen = np.random.default_rng(seed)
+    tr = TierMigrationTracker()
+    prev = {}
+    expected = {}
+    for _ in range(8):
+        at = {c: float(gen.uniform(1, 100)) for c in
+              gen.choice(20, size=int(gen.integers(4, 16)),
+                         replace=False)}
+        tiers = tiering(at, m=3)
+        cur = assignment(tiers)
+        for c, t_new in cur.items():
+            t_old = prev.get(c)
+            if t_old is not None and t_old != t_new:
+                key = (t_old, t_new)
+                expected[key] = expected.get(key, 0) + 1
+        prev.update(cur)
+        tr.update(tiers)
+    assert tr.matrix == expected
+    assert tr.n_migrations() == sum(expected.values())
