@@ -6,6 +6,9 @@ pairs under cumulative optimization variants and records the roofline
 deltas.  Baselines (v0) are the cached dry-run records.
 
     PYTHONPATH=src python -m benchmarks.perf_iterate [--target all]
+
+Roofline one-off: writes its own results/perf/ records and stays
+outside the ``BENCH_*.json`` / ``compare.py`` bench trajectory.
 """
 
 import argparse

@@ -6,6 +6,9 @@ baseline row (useful < 0.3 or collective-bound) and record the optimized
 roofline — shows the hillclimbed fixes aren't target-specific.
 
     PYTHONPATH=src python -m benchmarks.perf_optimized_matrix
+
+Roofline one-off: writes its own results/perf/ records and stays
+outside the ``BENCH_*.json`` / ``compare.py`` bench trajectory.
 """
 
 import dataclasses

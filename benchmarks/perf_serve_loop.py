@@ -5,6 +5,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 gathers out of the decode scan (amortizing them across tokens)?
 
     PYTHONPATH=src python -m benchmarks.perf_serve_loop
+
+Roofline one-off: writes its own results/perf/ records and stays
+outside the ``BENCH_*.json`` / ``compare.py`` bench trajectory.
 """
 
 import dataclasses

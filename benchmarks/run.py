@@ -5,6 +5,13 @@ framework's hot paths (aggregation kernel, attention paths, SSM scan,
 tiering/selection control plane, CNN train step) and summarizes the
 paper-figure experiments if their cached results exist.  ``--paper``
 additionally runs the Table-2 + Fig-5..9 reproductions (CI scale).
+
+``--json`` writes the micro-suite timings as ``BENCH_micro.json``
+(``benchmarks/common.write_bench_json`` payload), joining the
+``compare.py`` bench trajectory: every ``<name>_us`` key lands in the
+timing band, the ``derived`` annotations ride in the context block,
+and the cache-dependent dryrun summary stays out of the gated results
+(its presence varies with ``results/dryrun``).
 """
 
 from __future__ import annotations
@@ -17,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, time_fn
+from benchmarks.common import (RESULTS_DIR, add_json_arg, maybe_write_json,
+                               time_fn)
 
 
 def bench_fedagg():
@@ -154,18 +162,25 @@ def main() -> None:
                     help="also run Table2 + Fig5-9 repro (CI scale)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale repro (hours)")
+    add_json_arg(ap, "micro")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
     suites = [bench_fedagg, bench_attention, bench_ssm, bench_mlstm,
               bench_control_plane, bench_cnn_step, bench_lm_step,
               summarize_dryrun]
+    results, notes = {}, {}
     for suite in suites:
         try:
             for name, us, derived in suite():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                if suite is not summarize_dryrun:
+                    results[f"{name}_us"] = us
+                notes[name] = derived
         except Exception as e:  # noqa: BLE001
             print(f"{suite.__name__},-1,ERROR:{e!r}", flush=True)
+    maybe_write_json(args, "micro", results,
+                     extra_context={"derived": notes})
 
     if args.paper or args.full:
         from benchmarks.bench_table2 import run as table2

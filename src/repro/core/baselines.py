@@ -240,7 +240,8 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
                  eval_every: int = 5, window: int = 0,
                  window_secs: float = 0.0, mesh=None,
                  use_store=None, store_capacity=None,
-                 store_cold_dir=None) -> RunHistory:
+                 store_cold_dir=None, quant_bits: int = 32,
+                 error_feedback: bool = True) -> RunHistory:
     """FedAsync on the event-driven runtime.
 
     ``window=0`` (default) reproduces the sequential one-merge-per-event
@@ -262,7 +263,9 @@ def run_fedasync(trainer, network, fl: FLConfig, *, engine: str = "batched",
                        eval_every=eval_every, verbose=verbose,
                        mesh=mesh, use_store=use_store,
                        store_capacity=store_capacity,
-                       store_cold_dir=store_cold_dir).run()
+                       store_cold_dir=store_cold_dir,
+                       quant_bits=quant_bits,
+                       error_feedback=error_feedback).run()
 
 
 def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
@@ -270,7 +273,8 @@ def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                 eval_every: int = 5, window: int = 0,
                 window_secs: float = 0.0, mesh=None,
                 use_store=None, store_capacity=None,
-                store_cold_dir=None) -> RunHistory:
+                store_cold_dir=None, quant_bits: int = 32,
+                error_feedback: bool = True) -> RunHistory:
     """FedBuff [Nguyen'22]: async with a K-completion aggregation goal
     (default K = fl.tau, the sync methods' per-round cohort size)."""
     from repro.runtime.async_loop import AsyncRunner
@@ -280,7 +284,9 @@ def run_fedbuff(trainer, network, fl: FLConfig, *, engine: str = "batched",
                        eval_every=eval_every, verbose=verbose,
                        mesh=mesh, use_store=use_store,
                        store_capacity=store_capacity,
-                       store_cold_dir=store_cold_dir).run()
+                       store_cold_dir=store_cold_dir,
+                       quant_bits=quant_bits,
+                       error_feedback=error_feedback).run()
 
 
 def run_feddct_async(trainer, network, fl: FLConfig, **kw) -> RunHistory:

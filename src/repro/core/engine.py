@@ -207,6 +207,13 @@ class BatchedClientEngine:
         engine was built with ``use_kernel_agg`` (interpret-mode on
         CPU, compiled on TPU) — the same program the dict path runs.
         Returns ``(new_params, new_global_flat)``.
+
+        Row format is the STORE's concern: under ``quant_bits=8`` the
+        gather dequantizes int8 rows into the cohort's f32 start
+        params and the scatter re-quantizes the merged row per client
+        (error-feedback residual folded in), so this window step is
+        the per-window quantize -> store -> dequantize cycle without a
+        single engine-side branch.
         """
         ids = [int(c) for c in client_ids]
         seeds = [int(s) for s in rnd_seeds]

@@ -16,6 +16,15 @@ runtime are unchanged consumers, but splits residency:
   (``HostColdTier``, sparse: untouched clients cost nothing) or
   spilled to disk in ``checkpoint/ckpt.py`` chunks (``DiskColdTier``).
 
+Both tiers store whatever segment tuple the dense store's row format
+defines — ``(f32, int32)`` rows, or ``(int8, f32 scale/zp, int32)``
+rows under ``quant_bits=8``, which shrinks the host dict and the disk
+chunks ~4x.  Residency moves raw stored segments (bit-exact copies,
+never a re-quantization), and all quantize/dequantize math runs the
+dense store's standalone shared programs, so quantized tiered
+histories stay bit-identical to the quantized DENSE store (while both
+differ from f32 by the gated convergence delta).
+
 Residency moves are pure copies of f32/int32 rows (device<->host
 round-trips are bit-exact), and every merge runs either the dense
 store's fused program or the same folded-merge subgraph compiled
@@ -67,44 +76,54 @@ from repro.obs import telemetry as obs
 
 
 class HostColdTier:
-    """Sparse pinned-host cold tier: client id -> (f32 row, int32 row).
+    """Sparse pinned-host cold tier: client id -> tuple of segment rows.
 
-    Rows never written read as the template row (the dense store
-    initializes every row to the template, so the default is exact),
-    which makes a 1M-client store cost O(touched clients), not O(N).
+    The segment layout is whatever ``*templates`` describes — ``(f32
+    row, int32 row)`` for the f32 store, ``(int8 row, f32 scale/zp
+    row, int32 row)`` for the quantized store, whose cold rows are
+    therefore ~4x smaller (dtypes are PRESERVED, never widened).  Rows
+    never written read as the template row (the dense store initializes
+    every row to the template, so the default is exact), which makes a
+    1M-client store cost O(touched clients), not O(N).
     """
 
-    def __init__(self, f_template: np.ndarray, i_template: np.ndarray):
+    def __init__(self, *templates: np.ndarray):
         # owned copies: device arrays view as read-only, and zero-width
         # np.tile of a read-only row stays read-only
-        self._f0 = np.array(f_template, np.float32)
-        self._i0 = np.array(i_template, np.int32)
-        self._rows: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._t = tuple(np.array(t) for t in templates)
+        self.row_nbytes = int(sum(t.nbytes for t in self._t))
+        self._rows: Dict[int, Tuple[np.ndarray, ...]] = {}
 
     def __len__(self) -> int:
         return len(self._rows)
 
-    def read(self, ids: Sequence[int]):
-        """-> ((k, Pf) f32, (k, Pi) int32) row blocks (fresh copies)."""
-        f = np.stack([self._rows[c][0] if c in self._rows else self._f0
-                      for c in ids])
-        i = np.stack([self._rows[c][1] if c in self._rows else self._i0
-                      for c in ids])
-        return f, i
+    @property
+    def nbytes(self) -> int:
+        """Bytes of materialized cold rows (sparse — untouched clients
+        cost nothing)."""
+        return len(self._rows) * self.row_nbytes
 
-    def write(self, ids: Sequence[int], frows: np.ndarray,
-              irows: np.ndarray) -> None:
-        """Write rows for ``ids``; a 1-D ``frows`` broadcasts one row
-        to every id (the scatter-one-global-row shape)."""
-        frows = np.asarray(frows, np.float32)
-        irows = np.asarray(irows, np.int32)
-        if frows.ndim == 1:
-            fr, ir = frows.copy(), irows.copy()
-            for c in ids:
-                self._rows[int(c)] = (fr, ir)
-            return
+    def read(self, ids: Sequence[int]):
+        """-> tuple of (k, P_seg) row blocks (fresh copies), one per
+        segment, template dtypes."""
+        idl = [int(c) for c in ids]
+        return tuple(
+            np.stack([self._rows[c][j] if c in self._rows else t
+                      for c in idl])
+            for j, t in enumerate(self._t))
+
+    def write(self, ids: Sequence[int], *blocks: np.ndarray) -> None:
+        """Write rows for ``ids``.  Broadcast is PER SEGMENT: a 1-D
+        block shares one row copy across every id (the scatter-one-
+        global-row shape), a 2-D block is per-client — the quantized
+        write-around mixes both (per-client int8/meta, one shared
+        sidecar row)."""
+        blocks = [np.asarray(b, t.dtype) for b, t in zip(blocks, self._t)]
+        shared = [b.copy() if b.ndim == 1 else None for b in blocks]
         for k, c in enumerate(ids):
-            self._rows[int(c)] = (frows[k].copy(), irows[k].copy())
+            self._rows[int(c)] = tuple(
+                s if s is not None else b[k].copy()
+                for s, b in zip(shared, blocks))
 
 
 class DiskColdTier:
@@ -116,9 +135,8 @@ class DiskColdTier:
     preserves the tiered store's bit-identity guarantee.
     """
 
-    def __init__(self, ckpt_dir: str, n_rows: int, f_template: np.ndarray,
-                 i_template: np.ndarray, *, chunk: int = 512,
-                 cache_chunks: int = 4):
+    def __init__(self, ckpt_dir: str, n_rows: int, *templates: np.ndarray,
+                 chunk: int = 512, cache_chunks: int = 4):
         if chunk < 1 or cache_chunks < 1:
             raise ValueError("chunk and cache_chunks must be >= 1")
         self.dir = ckpt_dir
@@ -126,13 +144,23 @@ class DiskColdTier:
         self.n = int(n_rows)
         self.chunk = int(chunk)
         self.cache_chunks = int(cache_chunks)
-        self._f0 = np.array(f_template, np.float32)
-        self._i0 = np.array(i_template, np.int32)
+        # segment templates, dtypes preserved — quantized stores spill
+        # int8 chunks, so their disk footprint shrinks with the rows
+        self._t = tuple(np.array(t) for t in templates)
+        self.row_nbytes = int(sum(t.nbytes for t in self._t))
         self._cache: "OrderedDict[int, Dict[str, np.ndarray]]" = OrderedDict()
         self._dirty: set = set()
 
     def _rows_in(self, cid: int) -> int:
         return min(self.chunk, self.n - cid * self.chunk)
+
+    @property
+    def nbytes(self) -> int:
+        """Logical bytes of materialized chunks (on disk or cached)."""
+        cids = {int(fn[5:13]) for fn in os.listdir(self.dir)
+                if fn.startswith("ckpt_") and fn.endswith(".npz")}
+        cids |= set(self._cache)
+        return sum(self._rows_in(c) for c in cids) * self.row_nbytes
 
     def _load(self, cid: int) -> Dict[str, np.ndarray]:
         blk = self._cache.get(cid)
@@ -142,16 +170,16 @@ class DiskColdTier:
         rows = self._rows_in(cid)
         path = os.path.join(self.dir, f"ckpt_{cid:08d}.npz")
         if os.path.exists(path):
-            like = {"f": np.zeros((rows, self._f0.shape[0]), np.float32),
-                    "i": np.zeros((rows, self._i0.shape[0]), np.int32)}
+            like = {f"s{j}": np.zeros((rows, t.shape[0]), t.dtype)
+                    for j, t in enumerate(self._t)}
             loaded = load_checkpoint(self.dir, cid, like)
             # np.array copies: a loaded device array views as read-only,
             # and chunk blocks must stay writable for row updates
-            blk = {"f": np.array(loaded["f"], np.float32),
-                   "i": np.array(loaded["i"], np.int32)}
+            blk = {f"s{j}": np.array(loaded[f"s{j}"], t.dtype)
+                   for j, t in enumerate(self._t)}
         else:
-            blk = {"f": np.tile(self._f0, (rows, 1)),
-                   "i": np.tile(self._i0, (rows, 1))}
+            blk = {f"s{j}": np.tile(t, (rows, 1))
+                   for j, t in enumerate(self._t)}
         self._cache[cid] = blk
         while len(self._cache) > self.cache_chunks:
             old_cid, old_blk = self._cache.popitem(last=False)
@@ -161,27 +189,26 @@ class DiskColdTier:
         return blk
 
     def read(self, ids: Sequence[int]):
-        f = np.empty((len(ids), self._f0.shape[0]), np.float32)
-        i = np.empty((len(ids), self._i0.shape[0]), np.int32)
+        outs = [np.empty((len(ids), t.shape[0]), t.dtype)
+                for t in self._t]
         for k, c in enumerate(ids):
             c = int(c)
             blk = self._load(c // self.chunk)
             off = c % self.chunk
-            f[k], i[k] = blk["f"][off], blk["i"][off]
-        return f, i
+            for j, o in enumerate(outs):
+                o[k] = blk[f"s{j}"][off]
+        return tuple(outs)
 
-    def write(self, ids: Sequence[int], frows: np.ndarray,
-              irows: np.ndarray) -> None:
-        frows = np.asarray(frows, np.float32)
-        irows = np.asarray(irows, np.int32)
-        one_row = frows.ndim == 1
+    def write(self, ids: Sequence[int], *blocks: np.ndarray) -> None:
+        # per-segment broadcast, as in HostColdTier.write
+        blocks = [np.asarray(b, t.dtype) for b, t in zip(blocks, self._t)]
         for k, c in enumerate(ids):
             c = int(c)
             cid = c // self.chunk
             blk = self._load(cid)
             off = c % self.chunk
-            blk["f"][off] = frows if one_row else frows[k]
-            blk["i"][off] = irows if one_row else irows[k]
+            for j, b in enumerate(blocks):
+                blk[f"s{j}"][off] = b if b.ndim == 1 else b[k]
             self._dirty.add(cid)
 
     def flush(self) -> None:
@@ -204,7 +231,8 @@ class TieredClientStateStore(ClientStateStore):
 
     def __init__(self, template_params, n_clients: int, *, capacity: int,
                  cold: str = "host", cold_dir: Optional[str] = None,
-                 chunk: int = 512, mesh=None):
+                 chunk: int = 512, mesh=None, quant_bits: int = 32,
+                 error_feedback: bool = True):
         if mesh is not None and int(getattr(mesh, "size", 1)) > 1:
             raise ValueError(
                 "tiered residency manages one device's memory; shard the "
@@ -215,15 +243,21 @@ class TieredClientStateStore(ClientStateStore):
             raise ValueError(f"hot tier needs >= 1 row, got {capacity}")
         # set before super().__init__ — _buffer_rows() reads it
         self.capacity = min(capacity, int(n_clients))
-        super().__init__(template_params, n_clients, mesh=None)
-        frow, irow = self._fns.flatten(template_params)
-        f0, i0 = np.asarray(frow, np.float32), np.asarray(irow, np.int32)
+        super().__init__(template_params, n_clients, mesh=None,
+                         quant_bits=quant_bits,
+                         error_feedback=error_feedback)
+        # cold templates are row 0 of the freshly-initialized hot
+        # buffers — guaranteed bit-consistent with every hot row for
+        # BOTH row formats (the f32 init tiles the flattened template;
+        # the quantized init tiles its quantized image)
+        templates = tuple(np.asarray(b[0]) for b in self.bufs)
         if cold == "host":
-            self.cold = HostColdTier(f0, i0)
+            self.cold = HostColdTier(*templates)
         elif cold == "disk":
             if not cold_dir:
                 raise ValueError("cold='disk' needs cold_dir")
-            self.cold = DiskColdTier(cold_dir, self.n, f0, i0, chunk=chunk)
+            self.cold = DiskColdTier(cold_dir, self.n, *templates,
+                                     chunk=chunk)
         else:
             raise ValueError(f"unknown cold tier {cold!r} "
                              "(expected 'host' or 'disk')")
@@ -237,6 +271,9 @@ class TieredClientStateStore(ClientStateStore):
 
     def _buffer_rows(self) -> int:
         return self.capacity
+
+    def _cold_nbytes(self) -> int:
+        return int(self.cold.nbytes)
 
     # -- residency core -------------------------------------------------
     @property
@@ -304,19 +341,19 @@ class TieredClientStateStore(ClientStateStore):
             # write-behind: read the victims' rows BEFORE the promotion
             # write donates the buffer (np.asarray forces completion)
             with tel.span("residency.write_behind", rows=len(demote_c)):
-                frows, irows = self._fns.read_rows(self.buf, self.ibuf,
-                                                   self._ids(demote_s))
-                self.cold.write(demote_c, np.asarray(frows),
-                                np.asarray(irows))
+                blocks = self._fns.read_rows(self.bufs,
+                                             self._ids(demote_s))
+                self.cold.write(demote_c,
+                                *[np.asarray(b) for b in blocks])
             tel.inc("residency.write_behind", len(demote_c))
             self.n_demoted += len(demote_c)
         if staged:
             with tel.span("residency.promote", rows=len(staged),
                           kind=kind):
-                cf, ci = self.cold.read([c for c, _ in staged])
-                self.buf, self.ibuf = self._fns.write_rows(
-                    self.buf, self.ibuf,
-                    self._ids([s for _, s in staged]), cf, ci)
+                cblocks = self.cold.read([c for c, _ in staged])
+                self.bufs = self._fns.write_rows(
+                    self.bufs, self._ids([s for _, s in staged]),
+                    cblocks)
             tel.inc(f"residency.{kind}_promote", len(staged))
             self.n_promoted += len(staged)
         return [c for c, _ in staged]
@@ -343,64 +380,82 @@ class TieredClientStateStore(ClientStateStore):
 
     # -- gather / scatter (dense API, residency-aware) ------------------
     def _host_rows(self, idl: List[int]):
-        """Assemble (k, Pf)/(k, Pi) row blocks for ``idl`` from BOTH
-        tiers on host — the cohort-wider-than-capacity gather path.
-        Device->host copies of f32/int32 rows are bit-exact."""
+        """Assemble (k, P_seg) row blocks for ``idl`` from BOTH tiers
+        on host — the cohort-wider-than-capacity gather path.  Device->
+        host copies of stored rows are bit-exact (plain int8/f32/int32
+        segment moves, never a re-quantization)."""
         uniq = list(dict.fromkeys(idl))
-        vals: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        vals: Dict[int, Tuple[np.ndarray, ...]] = {}
         hot = [c for c in uniq if c in self._slots]
         if hot:
-            frows, irows = self._fns.read_rows(
-                self.buf, self.ibuf,
-                self._ids([self._slots[c] for c in hot]))
-            frows, irows = np.asarray(frows), np.asarray(irows)
+            blocks = self._fns.read_rows(
+                self.bufs, self._ids([self._slots[c] for c in hot]))
+            blocks = tuple(np.asarray(b) for b in blocks)
             for k, c in enumerate(hot):
-                vals[c] = (frows[k], irows[k])
+                vals[c] = tuple(b[k] for b in blocks)
         missing = [c for c in uniq if c not in self._slots]
         if missing:
-            cf, ci = self.cold.read(missing)
+            cblocks = self.cold.read(missing)
             for k, c in enumerate(missing):
-                vals[c] = (cf[k], ci[k])
-        f = np.stack([vals[c][0] for c in idl])
-        i = np.stack([vals[c][1] for c in idl])
-        return f, i
+                vals[c] = tuple(b[k] for b in cblocks)
+        return tuple(np.stack([vals[c][j] for c in idl])
+                     for j in range(len(self.bufs)))
 
     def gather(self, ids: Sequence[int]):
         idl = [int(c) for c in ids]
         uniq = list(dict.fromkeys(idl))
         if len(uniq) <= self.capacity:
             self._ensure_hot(uniq)
-            slots = [self._slots[c] for c in idl]
-            return self._fns.gather(self.buf, self.ibuf, self._ids(slots))
+            slots = self._ids([self._slots[c] for c in idl])
+            if self.quant_bits == 8:
+                # same read_rows -> from_rows pair as the dense
+                # quantized store: ONE dequantize compilation unit
+                return self._fns.from_rows(
+                    *self._fns.read_rows(self.bufs, slots))
+            return self._fns.gather(self.bufs, slots)
         # cohort wider than the hot tier: host-side assembly, no staging
         obs.TEL.inc("residency.oversubscribed_gather", len(uniq))
         with obs.TEL.span("residency.host_gather", rows=len(idl)):
-            f, i = self._host_rows(idl)
-            return self._fns.from_rows(f, i)
+            return self._fns.from_rows(*self._host_rows(idl))
 
     def gather_one(self, client_id: int):
         c = int(client_id)
         self._ensure_hot([c])
-        return self._fns.gather_one(self.buf, self.ibuf, self._slots[c])
+        return self._fns.gather_one(self.bufs, self._slots[c])
 
     def _scatter_row(self, ids: Sequence[int], frow, irow) -> None:
         """Write one flat global row into every ``ids`` slot, whichever
         tier each row lives in (hot rows in one device program, cold
-        rows write-around straight to the cold tier — no promotion)."""
+        rows write-around straight to the cold tier — no promotion).
+        Quantized stores quantize per TARGET CLIENT (each has its own
+        error-feedback residual) through the same standalone quantize
+        program as the dense store, then write the int8/meta blocks
+        into hot slots / cold rows — the stored bits cannot depend on
+        where the row lives."""
         uniq = list(dict.fromkeys(int(c) for c in ids))
         hot = [c for c in uniq if c in self._slots]
+        missing = [c for c in uniq if c not in self._slots]
         if hot:
-            self.buf, self.ibuf = self._fns.scatter(
-                self.buf, self.ibuf,
-                self._ids([self._slots[c] for c in hot]), frow, irow)
+            slots = self._ids([self._slots[c] for c in hot])
+            if self.quant_bits == 8:
+                qrows, mrows = self._quantize_for(hot, frow)
+                self.bufs = self._fns.write_q(self.bufs, slots, qrows,
+                                              mrows, irow)
+            else:
+                self.bufs = self._fns.scatter(self.bufs, slots, frow,
+                                              irow)
             for c in hot:
                 self._slots.move_to_end(c)
                 self._dirty.add(c)
-        missing = [c for c in uniq if c not in self._slots]
         if missing:
             obs.TEL.inc("residency.write_around", len(missing))
-            self.cold.write(missing, np.asarray(frow, np.float32),
-                            np.asarray(irow, np.int32))
+            if self.quant_bits == 8:
+                qrows, mrows = self._quantize_for(missing, frow)
+                self.cold.write(missing, np.asarray(qrows),
+                                np.asarray(mrows), np.asarray(irow))
+            else:
+                self.cold.write(missing, np.asarray(frow, np.float32),
+                                np.asarray(irow, np.int32))
 
     def scatter(self, ids: Sequence[int], flat_global):
         frow, irow = self._rows_of(flat_global)

@@ -158,6 +158,95 @@ def flatten_params_row(params):
          for l in jax.tree_util.tree_leaves(params)])
 
 
+# ---------------------------------------------------------------------------
+# Quantized row views: shifted-scale int8 segments with fused scales
+# ---------------------------------------------------------------------------
+
+# int8 grid radius and range divisor.  253 steps (not 254) leave half a
+# step of slack on each side of the value range, so snapping the
+# zero-point onto the quantization grid can never push a rounded index
+# past +/-127 — the round-trip error bound |x - dq(q(x))| <= scale/2
+# holds without the clip ever truncating an in-range value.
+QUANT_QMAX = 127.0
+QUANT_STEPS = 253.0
+
+
+def quantize_rows(frows, segs):
+    """f32 rows -> (int8 rows, per-segment scale/zero-point meta).
+
+    ``frows`` is (..., Pf) f32; ``segs`` is a static tuple of
+    ``(offset, size)`` float-segment views covering the row (the
+    store's per-leaf layout).  Returns ``(qrows (..., Pf) int8,
+    meta (..., 2L) f32)`` with ``meta[..., j]`` = scale and
+    ``meta[..., L+j]`` = the SNAP INDEX of segment ``j`` — the
+    zero-point expressed in grid steps (``zp = scale * snap``).
+
+    Shifted-scale scheme, per (row, segment): ``scale = range/253``
+    and the zero-point is the range midpoint snapped onto the
+    quantization grid (``snap = round(mid/scale)``).  Dequantization
+    is ``(q + snap) * scale``: storing the snap index rather than the
+    zero-point keeps that an add FEEDING a multiply — not the
+    ``a*b + c`` shape XLA contracts into an FMA (it fuses straight
+    through ``optimization_barrier`` on CPU) — so dequantized bits are
+    identical across compilation units and exactly match the numpy
+    oracle, and exact zeros round-trip exactly on every backend
+    (``q + snap == 0 -> 0 * scale == 0``; 0 in [lo, hi] bounds
+    ``|snap| <= 126``, inside the clip range).  Constant segments
+    (range 0) take scale=1, snap=value — an exact round-trip.  Every
+    reduction here is a per-segment min/max (order-independent), so
+    quantized bits are identical across batch shapes — the property
+    that keeps dense-quant and tiered-quant histories bit-identical.
+    """
+    qs, scales, snaps = [], [], []
+    for off, size in segs:
+        x = frows[..., off:off + size]
+        lo, hi = x.min(axis=-1), x.max(axis=-1)
+        rng = hi - lo
+        flat0 = rng <= 0.0
+        # explicit reciprocal multiply: XLA strength-reduces division
+        # by a constant to exactly this, so spelling it out pins the
+        # f32 semantics across backends AND keeps the numpy oracle
+        # (ref.quantize_rows_ref) bit-exact without mimicking an
+        # optimizer pass
+        scale = jnp.where(flat0, jnp.float32(1.0),
+                          rng * jnp.float32(1.0 / QUANT_STEPS))
+        snap = jnp.where(flat0, lo,
+                         jnp.round((lo + hi) / (2.0 * scale)))
+        zp = scale * snap
+        q = jnp.clip(jnp.round((x - zp[..., None]) / scale[..., None]),
+                     -QUANT_QMAX, QUANT_QMAX).astype(jnp.int8)
+        qs.append(q)
+        scales.append(scale)
+        snaps.append(snap)
+    qrows = jnp.concatenate(qs, axis=-1)
+    meta = jnp.stack(scales + snaps, axis=-1)
+    return qrows, meta
+
+
+def dequantize_rows(qrows, meta, segs):
+    """Inverse row view of ``quantize_rows``: (..., Pf) int8 rows plus
+    (..., 2L) scale/snap meta -> (..., Pf) f32 rows.  Pure elementwise
+    ``(q + snap) * scale`` per segment — an add feeding a multiply has
+    no FMA contraction to vary by compilation unit, so the bits are
+    stable across batch shapes, programs and the numpy oracle (see
+    ``quantize_rows``)."""
+    n = len(segs)
+    outs = []
+    for j, (off, size) in enumerate(segs):
+        q = qrows[..., off:off + size].astype(jnp.float32)
+        outs.append((q + meta[..., n + j, None]) * meta[..., j, None])
+    return jnp.concatenate(outs, axis=-1)
+
+
+def dequantize_segment(qrows, meta, segs, j):
+    """One segment's dequantized f32 view (``segs[j]`` of ``qrows``) —
+    the per-leaf form the store's fused gather slices directly into
+    leaf shapes, skipping the full-row concat."""
+    off, size = segs[j]
+    q = qrows[..., off:off + size].astype(jnp.float32)
+    return (q + meta[..., len(segs) + j, None]) * meta[..., j, None]
+
+
 def fedagg_fold_op(updates, g, coef, *, block_p=16384, interpret=None):
     interpret = on_cpu() if interpret is None else interpret
     return fedagg_fold(updates, g, coef, block_p=block_p,

@@ -63,6 +63,20 @@ def main(argv=None):
                     help="with --hot-rows: spill the cold tier to "
                          "ckpt-chunk files under this directory "
                          "instead of pinned host memory")
+    ap.add_argument("--quant-bits", type=int, default=32,
+                    choices=[8, 32],
+                    help="async methods only: client-state row format. "
+                         "32 = the byte-for-byte f32 store path; 8 = "
+                         "int8 quantized rows with per-leaf fused "
+                         "scales and server-side error feedback "
+                         "(~4x smaller rows and uplink, seeded-"
+                         "deterministic, gated convergence delta vs "
+                         "f32)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="with --quant-bits 8: drop the per-client "
+                         "error-feedback residual accumulators "
+                         "(ablation — quantization bias goes "
+                         "uncorrected)")
     ap.add_argument("--mesh-clients", type=int, default=0,
                     help="shard cohorts over a 1-D client mesh of N "
                          "devices (0 = single-device engine; on CPU "
@@ -110,6 +124,10 @@ def main(argv=None):
                                              "feddct_async"):
         kw["store_capacity"] = args.hot_rows
         kw["store_cold_dir"] = args.cold_dir
+    if args.quant_bits != 32 and args.method in ("fedasync", "fedbuff",
+                                                 "feddct_async"):
+        kw["quant_bits"] = args.quant_bits
+        kw["error_feedback"] = not args.no_error_feedback
     if args.trace or args.report is not None:
         from repro import obs
         with obs.tracing() as tel:

@@ -40,6 +40,8 @@ counter ``fl.straggler.carried{tier=}``      async: merged late, not lost
 counter ``fl.straggler.dropped{tier=}``      sync: update discarded
 counter ``fl.client.selected{client=}``      per-client selection counts
 counter ``fl.client.update{client=}``        per-client merged updates
+counter ``fl.bytes.up``(+``{tier=}``)        modeled uplink bytes (wire
+                                             format: int8+meta or f32)
 gauge   ``fl.population``                    total client count
 gauge   ``fl.tier.count``                    number of tiers this round
 gauge   ``fl.tier.size{tier=}``              membership time series
@@ -217,6 +219,21 @@ def record_straggler(kind: str, tier: Optional[int] = None, n: int = 1):
         tel.inc(f"fl.straggler.{kind}", n)
     else:
         _inc(tel, f"fl.straggler.{kind}", n, tier=tier)
+
+
+def record_uplink(nbytes: int, tier: Optional[int] = None):
+    """Modeled uplink bytes of merged client updates — ``nbytes`` is
+    the wire size of the updates that landed this window (row format
+    dependent: int8+meta under ``quant_bits=8``, full f32 otherwise).
+    Labeled per 1-indexed tier when the runner knows it (feddct_async);
+    the plain counter otherwise (fedasync/fedbuff)."""
+    tel = obs.TEL
+    if not tel.enabled or nbytes <= 0:
+        return
+    if tier is None:
+        tel.inc("fl.bytes.up", int(nbytes))
+    else:
+        _inc(tel, "fl.bytes.up", int(nbytes), tier=tier)
 
 
 def record_client_updates(client_ids: Iterable[int]):

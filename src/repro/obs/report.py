@@ -103,9 +103,11 @@ def build_report(summary: Dict, history: Optional[Dict] = None) -> Dict:
     frac = _labeled(hists, "fl.response_frac")
     thr = _labeled(hists, "fl.threshold_s")
     stale = _labeled(hists, "fl.staleness")
+    uplink = _labeled(counters, "fl.bytes.up")
+    n_rounds = int(counters.get("fl.tier.rounds", 0))
 
     tier_ids = sorted(set(selected) | set(participated) | set(timeouts)
-                      | set(sizes) | set(resp))
+                      | set(sizes) | set(resp) | set(uplink))
     tiers = {}
     for t in tier_ids:
         part = int(participated.get(t, 0))
@@ -137,6 +139,14 @@ def build_report(summary: Dict, history: Optional[Dict] = None) -> Dict:
         if st:
             row["staleness_mean"] = st["mean"]
             row["staleness_p95"] = st["p95"]
+        # communication volume (PR 9 ``fl.bytes.up{tier=}`` counters);
+        # traces from older runs simply have no entry -> "-" columns
+        if t in uplink:
+            b = int(uplink[t])
+            row["uplink_bytes"] = b
+            row["uplink_mb"] = b / 1e6
+            if n_rounds:
+                row["uplink_bytes_per_round"] = b / n_rounds
         tiers[t] = row
 
     migrations = {}
@@ -176,6 +186,14 @@ def build_report(summary: Dict, history: Optional[Dict] = None) -> Dict:
                                            0)),
         "wall_s": summary.get("wall_s"),
     }
+    total_up = int(sum(uplink.values())
+                   + counters.get("fl.bytes.up", 0))
+    if total_up:
+        report["uplink"] = {
+            "total_bytes": total_up,
+            "total_mb": total_up / 1e6,
+            "bytes_per_round": (total_up / n_rounds) if n_rounds else None,
+        }
     norm = hists.get("fl.cohort.update_norm")
     if norm:
         report["cohort_update_norm"] = norm
@@ -212,7 +230,8 @@ def format_report(report: Dict, source: str = "") -> str:
                  f"stragglers: carried={report['stragglers']['carried']} "
                  f"dropped={report['stragglers']['dropped']}")
     cols = ["tier", "size", "selected", "particip", "timeouts", "hit_rate",
-            "resp_s", "thr_s", "headroom", "stale_p95"]
+            "resp_s", "thr_s", "headroom", "stale_p95", "up_B/rnd",
+            "up_MB"]
     rows = [cols]
     for t, r in sorted(report["tiers"].items()):
         rows.append([
@@ -222,6 +241,8 @@ def format_report(report: Dict, source: str = "") -> str:
             _fmt(r.get("mean_response_s")), _fmt(r.get("mean_threshold_s")),
             _fmt(r.get("mean_response_frac"), ".2f"),
             _fmt(r.get("staleness_p95"), ".1f"),
+            _fmt(r.get("uplink_bytes_per_round"), ".0f"),
+            _fmt(r.get("uplink_mb"), ".3f"),
         ])
     widths = [max(len(row[i]) for row in rows) for i in range(len(cols))]
     for row in rows:
@@ -230,6 +251,12 @@ def format_report(report: Dict, source: str = "") -> str:
         pairs = ", ".join(f"{k}: {v}" for k, v in
                           sorted(report["migration_matrix"].items()))
         lines.append(f"migration matrix  {pairs}")
+    up = report.get("uplink")
+    if up:
+        per_rnd = (f" ({up['bytes_per_round']:.0f} B/round)"
+                   if up.get("bytes_per_round") else "")
+        lines.append(f"uplink  {up['total_mb']:.3f} MB modeled"
+                     f"{per_rnd}")
     sel = report["fairness"].get("selection")
     if sel:
         lines.append(f"selection fairness  gini={sel['gini']:.3f} "

@@ -41,7 +41,7 @@ from repro.config.base import FLConfig
 from repro.core.aggregation import staleness_merge
 from repro.core.engine import make_engine
 from repro.core.selection import cstt
-from repro.core.state import ClientStateStore
+from repro.core.state import ClientStateStore, wire_bytes
 from repro.core.tiering import evaluate_client, tiering, update_avg_time
 from repro.fl.metrics import RunHistory
 from repro.obs import flstats
@@ -51,7 +51,8 @@ from repro.runtime.events import ClientEvent, EventQueue
 
 
 def _resolve_store(params, n_clients: int, mesh, use_store,
-                   window_active: bool, capacity=None, cold_dir=None):
+                   window_active: bool, capacity=None, cold_dir=None,
+                   quant_bits: int = 32, error_feedback: bool = True):
     """-> ``(ClientStateStore or None, reason)`` applying the store
     policy in one place.  ``None`` store means the dict-of-pytrees
     path; ``reason`` is a machine-checkable tag recorded on the
@@ -78,20 +79,37 @@ def _resolve_store(params, n_clients: int, mesh, use_store,
     store (reason ``"auto-tiered"``) — except under an explicit
     ``use_store=False``, which still wins.  Histories are bit-identical
     across all residency layouts, so this only moves memory.
+
+    ``quant_bits=8`` selects int8 quantized rows (+ ``error_feedback``
+    residual accumulators).  The quantized format IS the store — there
+    is no dict-of-pytrees rendition of it — so it forces the store on
+    even for a pure sequential ``window=0`` loop (reason
+    ``"quant-int8"``) and an explicit ``use_store=False`` raises
+    instead of silently running unquantized.
     """
+    quant = int(quant_bits) != 32
     if use_store is False:
+        if quant:
+            raise ValueError(
+                "quant_bits=8 lives in the client-state store; it cannot "
+                "combine with use_store=False (the dict path has no "
+                "quantized rows)")
         return None, "forced-off"
+    qkw = dict(quant_bits=quant_bits, error_feedback=error_feedback)
     if capacity is not None:
         from repro.core.residency import TieredClientStateStore
         reason = "forced-on" if use_store is True else "auto-tiered"
         return TieredClientStateStore(
             params, n_clients, capacity=capacity,
             cold="disk" if cold_dir else "host", cold_dir=cold_dir,
-            mesh=mesh), reason
+            mesh=mesh, **qkw), reason
     if use_store is None and not window_active:
+        if quant:
+            return (ClientStateStore(params, n_clients, mesh=mesh, **qkw),
+                    "quant-int8")
         return None, "window0-sequential"
     reason = "forced-on" if use_store is True else "auto-windowed"
-    return ClientStateStore(params, n_clients, mesh=mesh), reason
+    return ClientStateStore(params, n_clients, mesh=mesh, **qkw), reason
 
 
 def _alphas(fl: FLConfig, stalenesses: List[int]) -> List[float]:
@@ -186,7 +204,8 @@ class AsyncRunner:
                  use_kernel_agg: bool = False, window: int = 0,
                  window_secs: float = 0.0, eval_every: int = 5,
                  verbose: bool = False, mesh=None, use_store=None,
-                 store_capacity=None, store_cold_dir=None):
+                 store_capacity=None, store_cold_dir=None,
+                 quant_bits: int = 32, error_feedback: bool = True):
         self.trainer = trainer
         self.network = network
         self.fl = fl
@@ -209,6 +228,12 @@ class AsyncRunner:
         # device) and the optional disk cold tier for the demoted rest.
         self.store_capacity = store_capacity
         self.store_cold_dir = store_cold_dir
+        # row format: 32 = the byte-for-byte f32 path, 8 = int8
+        # quantized rows (+ server-side error-feedback accumulators
+        # unless error_feedback=False) — seeded-deterministic with a
+        # gated convergence delta vs f32, never bit-identical to it.
+        self.quant_bits = int(quant_bits)
+        self.error_feedback = bool(error_feedback)
         # resolved snapshot-path tag ("auto-windowed" / "forced-on" /
         # "forced-off" / "window0-sequential" / "auto-tiered"), set by
         # run() and also recorded on the RunHistory meta.
@@ -232,7 +257,12 @@ class AsyncRunner:
             params, fl.n_clients, self.mesh, self.use_store,
             window_active=(self.buffer.window > 0
                            or self.buffer.window_secs > 0),
-            capacity=self.store_capacity, cold_dir=self.store_cold_dir)
+            capacity=self.store_capacity, cold_dir=self.store_cold_dir,
+            quant_bits=self.quant_bits, error_feedback=self.error_feedback)
+        # modeled uplink bytes of one merged client update in the run's
+        # row format (the store's if one runs, else dense f32)
+        wb = (store.wire_bytes_per_update if store is not None
+              else wire_bytes(params, self.quant_bits))
         snapshots: Dict[int, object] = {}
         if store is None:
             snapshots = {c: params for c in range(fl.n_clients)}
@@ -249,6 +279,11 @@ class AsyncRunner:
                                 else "dict"),
                   "hot_rows": store.rows if store is not None else 0,
                   "kernel_agg": self.use_kernel_agg,
+                  "quant_bits": (store.quant_bits if store is not None
+                                 else 32),
+                  "error_feedback": (store.error_feedback
+                                     if store is not None else False),
+                  "wire_bytes_per_update": wb,
                   "mesh_devices": (int(self.mesh.size)
                                    if self.mesh is not None else 1)})
         first = net.delays(np.arange(fl.n_clients), 0)
@@ -290,6 +325,8 @@ class AsyncRunner:
                 flstats.record_staleness(
                     [version + i - e.version for i, e in enumerate(batch)])
                 flstats.record_client_updates([e.client for e in batch])
+                # tier-less runners: one unlabeled uplink count per window
+                flstats.record_uplink(len(batch) * wb)
             with tel.span("window.merge", cohort=len(batch)):
                 if store is not None:
                     # the merged clients' snapshot rows are re-scattered
@@ -331,6 +368,14 @@ class AsyncRunner:
         hist.meta["mean_cohort"] = (float(np.mean(self.cohort_sizes))
                                     if self.cohort_sizes else 0.0)
         hist.meta["n_drains"] = len(self.cohort_sizes)
+        # cumulative modeled uplink: every merged update paid one wire
+        # row (telemetry-independent — derived from the merge count)
+        hist.meta["bytes_up"] = upd * wb
+        if store is not None:
+            bt = store.bytes_by_tier()
+            hist.meta["store_bytes_hot"] = bt["hot"]
+            hist.meta["store_bytes_cold"] = bt["cold"]
+            hist.meta["store_bytes_ef"] = bt["ef"]
         run_span.end()
         tel.summarize_into(hist.meta)
         return hist
@@ -340,7 +385,8 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                      engine: str = "batched", use_kernel_agg: bool = False,
                      verbose: bool = False, eval_every: int = 1,
                      mesh=None, use_store=None, store_capacity=None,
-                     store_cold_dir=None) -> RunHistory:
+                     store_cold_dir=None, quant_bits: int = 32,
+                     error_feedback: bool = True) -> RunHistory:
     """Semi-async FedDCT: tier timeouts become aggregation windows.
 
     Per round: dynamic tiering + CSTT selection exactly as the sync
@@ -365,7 +411,11 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     store, store_reason = _resolve_store(params, fl.n_clients, mesh,
                                          use_store, window_active=True,
                                          capacity=store_capacity,
-                                         cold_dir=store_cold_dir)
+                                         cold_dir=store_cold_dir,
+                                         quant_bits=quant_bits,
+                                         error_feedback=error_feedback)
+    wb = (store.wire_bytes_per_update if store is not None
+          else wire_bytes(params, quant_bits))
     hist = RunHistory(method="feddct_async", arch=trainer.cfg.arch_id,
                       meta={"mu": fl.mu, "primary_frac": fl.primary_frac,
                             "beta": fl.beta, "kappa": fl.kappa,
@@ -381,6 +431,12 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                             "hot_rows": (store.rows if store is not None
                                          else 0),
                             "kernel_agg": use_kernel_agg,
+                            "quant_bits": (store.quant_bits
+                                           if store is not None else 32),
+                            "error_feedback": (store.error_feedback
+                                               if store is not None
+                                               else False),
+                            "wire_bytes_per_update": wb,
                             "mesh_devices": (int(mesh.size)
                                              if mesh is not None else 1)})
     clock = 0.0
@@ -476,6 +532,8 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
                     tiers_of)
                 flstats.record_client_updates([e.client for e in batch])
                 for e, t in zip(batch, tiers_of):
+                    # per-tier modeled uplink: tier known at selection
+                    flstats.record_uplink(wb, tier=t)
                     if e.rnd < rnd:
                         flstats.record_straggler("carried", tier=t)
             with tel.span("window.merge", cohort=len(batch)):
@@ -519,6 +577,14 @@ def run_feddct_async(trainer, network, fl: FLConfig, *,
     hist.meta["mean_cohort"] = (float(np.mean(cohort_sizes))
                                 if cohort_sizes else 0.0)
     hist.meta["n_drains"] = len(cohort_sizes)
+    # cumulative modeled uplink over every merged update (version counts
+    # merges) — telemetry-independent, so the contract meta is always set
+    hist.meta["bytes_up"] = version * wb
+    if store is not None:
+        bt = store.bytes_by_tier()
+        hist.meta["store_bytes_hot"] = bt["hot"]
+        hist.meta["store_bytes_cold"] = bt["cold"]
+        hist.meta["store_bytes_ef"] = bt["ef"]
     run_span.end()
     tel.summarize_into(hist.meta)
     return hist

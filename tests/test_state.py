@@ -18,6 +18,8 @@ from repro.core.baselines import run_fedasync, run_fedbuff
 from repro.core.engine import make_engine
 from repro.core.state import ClientStateStore
 from repro.fl.network import WirelessNetwork
+from repro.kernels.ops import quantize_rows
+from repro.kernels.ref import dequantize_rows_ref, quantize_rows_ref
 from repro.fl.testing import SyntheticCohortTrainer
 from repro.runtime.async_loop import run_feddct_async
 
@@ -520,6 +522,227 @@ def test_store_reason_records_resolved_path():
     assert hf.meta["store_reason"] == "forced-on"
 
 
+# ---------------------------------------------------------------------------
+# int8 quantized rows + server-side error feedback (PR 9)
+# ---------------------------------------------------------------------------
+
+def _seg_layout(p, rng, max_segs=5):
+    """Random contiguous (offset, size) segments covering [0, p)."""
+    cuts = sorted(rng.choice(np.arange(1, p), size=min(max_segs - 1,
+                                                       p - 1),
+                             replace=False).tolist())
+    bounds = [0] + cuts + [p]
+    return tuple((bounds[i], bounds[i + 1] - bounds[i])
+                 for i in range(len(bounds) - 1))
+
+
+def test_quantize_rows_property_sweep_matches_ref():
+    """Seeded sweep of the row quantizer against the numpy oracle:
+    exact ops/ref parity, the half-step round-trip bound
+    ``|x - dq(q(x))| <= scale/2`` per (row, segment), exact zeros, and
+    exact constant segments."""
+    rng = np.random.default_rng(123)
+    for case in range(6):
+        rows, p = int(rng.integers(1, 7)), int(rng.integers(4, 40))
+        segs = _seg_layout(p, rng)
+        x = rng.normal(size=(rows, p)).astype(np.float32)
+        # per-segment magnitude spread: tiny to huge dynamic ranges
+        for j, (off, size) in enumerate(segs):
+            x[:, off:off + size] *= 10.0 ** float(rng.integers(-3, 4))
+        # a constant segment (rng=0 -> exact path) and exact zeros
+        off0, size0 = segs[0]
+        x[:, off0:off0 + size0] = np.float32(rng.normal())
+        zmask = rng.random(size=x.shape) < 0.15
+        zmask[:, off0:off0 + size0] = False      # keep seg 0 constant
+        x[zmask] = 0.0
+
+        q, m = jax.jit(quantize_rows,
+                       static_argnums=(1,))(jnp.asarray(x), segs)
+        q, m = np.asarray(q), np.asarray(m)
+        qr, mr = quantize_rows_ref(x, segs)
+        np.testing.assert_array_equal(q, qr)        # exact ops/ref parity
+        np.testing.assert_array_equal(m, mr)
+        dq = dequantize_rows_ref(q, m, segs)
+
+        assert q.dtype == np.int8 and m.shape == (rows, 2 * len(segs))
+        for j, (off, size) in enumerate(segs):
+            scale = m[:, j][:, None]                # (rows, 1)
+            err = np.abs(x[:, off:off + size] - dq[:, off:off + size])
+            assert (err <= scale * 0.5 * (1 + 1e-4) + 1e-12).all(), \
+                f"case {case} seg {j}: round-trip bound violated"
+        # exact zero preservation (0 is always on the snapped grid)
+        np.testing.assert_array_equal(dq[zmask], 0.0)
+        # the constant segment round-trips exactly (scale=1, zp=value)
+        np.testing.assert_array_equal(dq[:, off0:off0 + size0],
+                                      x[:, off0:off0 + size0])
+
+
+def test_quant_store_roundtrip_matches_ref_pipeline():
+    """Dense quant store: gather returns exactly what the numpy
+    quantize->dequantize oracle predicts, for float AND int-sidecar
+    templates (the sidecar stays lossless under quant_bits=8)."""
+    for tmpl, seed in ((_template, 60), (_int_template, 61)):
+        t0, t1 = tmpl(seed), tmpl(seed + 1)
+        store = ClientStateStore(t0, 4, quant_bits=8)
+        store.scatter_params([1], t1)
+        row = store.flatten(t1)
+        frow = np.asarray(row[0] if store.pi else row, np.float32)
+        q, m = quantize_rows_ref(frow[None], store._fsegs)
+        dq = dequantize_rows_ref(q, m, store._fsegs)[0]
+        np.testing.assert_array_equal(np.asarray(store.bufs[0][1]), q[0])
+        want = store.unflatten((jnp.asarray(dq), row[1])
+                               if store.pi else jnp.asarray(dq))
+        _tree_equal(store.gather_one(1), want)
+        # int/bool leaves specifically: still bit-exact vs the input
+        got = store.gather_one(1)
+        for k, leaf in t1.items():
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                np.testing.assert_array_equal(np.asarray(got[k]),
+                                              np.asarray(leaf))
+        # untouched rows still serve the (quantized) template
+        _tree_equal(store.gather_one(0), store.gather_one(3))
+
+
+def test_quant_store_error_feedback_residual_and_addback():
+    """EF contract: after scatter of row ``x`` the stored residual is
+    exactly ``x - dq(q(x))``; the NEXT scatter quantizes ``x + ef``
+    (add-back) and stores the new residual.  EF off keeps no state."""
+    t0, t1 = _template(70), _template(71)
+    store = ClientStateStore(t0, 4, quant_bits=8)
+    assert store.error_feedback
+    frow = np.asarray(store.flatten(t1), np.float32)
+
+    store.scatter_params([2], t1)
+    q1, m1 = quantize_rows_ref(frow[None], store._fsegs)
+    dq1 = dequantize_rows_ref(q1, m1, store._fsegs)[0]
+    ef1 = np.asarray(store.ef_residual(2))
+    np.testing.assert_array_equal(ef1, frow - dq1)
+
+    store.scatter_params([2], t1)                  # round 2: same update
+    x2 = frow + ef1
+    q2, m2 = quantize_rows_ref(x2[None], store._fsegs)
+    dq2 = dequantize_rows_ref(q2, m2, store._fsegs)[0]
+    np.testing.assert_array_equal(np.asarray(store.ef_residual(2)),
+                                  x2 - dq2)
+    np.testing.assert_array_equal(np.asarray(store.bufs[0][2]), q2[0])
+    assert store.bytes_by_tier()["ef"] == 4 * store.p
+
+    s2 = ClientStateStore(t0, 4, quant_bits=8, error_feedback=False)
+    s2.scatter_params([1], t1)
+    assert s2.ef_residual(1) is None
+    np.testing.assert_array_equal(np.asarray(s2.bufs[0][1]), q1[0])
+    assert s2.bytes_by_tier()["ef"] == 0
+
+
+def test_quant_store_validation_and_byte_accounting():
+    with pytest.raises(ValueError):
+        ClientStateStore(_template(), 4, quant_bits=4)
+    with pytest.raises(ValueError):                # needs a float leaf
+        ClientStateStore({"step": jnp.zeros((), jnp.int32)}, 4,
+                         quant_bits=8)
+    t = _int_template(80)
+    s8 = ClientStateStore(t, 4, quant_bits=8)
+    s32 = ClientStateStore(t, 4)
+    from repro.core.state import wire_bytes
+    assert s8.wire_bytes_per_update == wire_bytes(t, 8)
+    assert s32.wire_bytes_per_update == wire_bytes(t, 32)
+    assert s8.wire_bytes_per_update < s32.wire_bytes_per_update
+    # hot bytes shrink ~4x on the float segment (int sidecar unchanged)
+    b8, b32 = s8.bytes_by_tier(), s32.bytes_by_tier()
+    assert b8["hot"] < b32["hot"]
+    assert b8["hot"] == 4 * (s8.p + 8 * len(s8._fsegs) + 4 * s8.pi)
+
+
+def test_quant32_explicit_is_bit_identical_to_default_matrix():
+    """``quant_bits=32`` IS the existing store path: explicit 32 must
+    stay bit-identical to the default run and the dict reference."""
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=4, seed=3)
+    base = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=3,
+                        eval_every=4, use_store=True)
+    h32 = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=3,
+                       eval_every=4, use_store=True, quant_bits=32)
+    hd = run_fedasync(TinyCohortTrainer(), _net(fl), fl, window=3,
+                      eval_every=4, use_store=False)
+    _hist_equal(base, h32)
+    _hist_equal(h32, hd)
+    assert h32.meta["quant_bits"] == 32
+
+    fl2 = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                   seed=5, beta=1.1)
+    a = run_feddct_async(TinyCohortTrainer(), _net(fl2), fl2,
+                         use_store=True)
+    b = run_feddct_async(TinyCohortTrainer(), _net(fl2), fl2,
+                         use_store=True, quant_bits=32)
+    _hist_equal(a, b)
+
+
+def test_quant8_seeded_deterministic_and_meta():
+    """Quantized runs are seeded-deterministic (same seed -> identical
+    history) and the meta records what ran; the run may differ from f32
+    (gated convergence delta, NOT bit-identity)."""
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                  seed=5, beta=1.1)
+    ha = run_feddct_async(TinyCohortTrainer(), _net(fl), fl, quant_bits=8)
+    hb = run_feddct_async(TinyCohortTrainer(), _net(fl), fl, quant_bits=8)
+    _hist_equal(ha, hb)
+    assert ha.meta["quant_bits"] == 8
+    assert ha.meta["error_feedback"] is True
+    assert ha.meta["store"] is True
+    assert ha.meta["bytes_up"] > 0
+    hf = run_feddct_async(TinyCohortTrainer(), _net(fl), fl,
+                          use_store=True)
+    assert ha.meta["wire_bytes_per_update"] \
+        < hf.meta["wire_bytes_per_update"]
+    assert ha.meta["store_bytes_hot"] < hf.meta["store_bytes_hot"]
+    # quant8 cannot run without the store (the dict path has no rows)
+    with pytest.raises(ValueError):
+        run_feddct_async(TinyCohortTrainer(), _net(fl), fl, quant_bits=8,
+                         use_store=False)
+
+
+def test_error_feedback_cancels_accumulated_quantization_bias():
+    """What EF buys — and what running WITHOUT it measurably costs.
+    For a slowly-drifting row (drift far below the grid step),
+    deterministic rounding repeats nearly the same error on every
+    write, so the stored rows' accumulated error grows linearly
+    without EF; with EF it telescopes to the one outstanding residual
+    (``dq_t - x_t = ef_{t-1} - ef_t``), bounded by half a grid step."""
+    t = _template(90)
+    se = ClientStateStore(t, 2, quant_bits=8)
+    sn = ClientStateStore(t, 2, quant_bits=8, error_feedback=False)
+    frow0 = np.asarray(se.flatten(t), np.float32)
+    errs_e = np.zeros_like(frow0)
+    errs_n = np.zeros_like(frow0)
+    for i in range(60):
+        x = frow0 * np.float32(1.0 + i * 1e-5)
+        for s, errs in ((se, errs_e), (sn, errs_n)):
+            s.scatter([0], jnp.asarray(x))
+            dq = dequantize_rows_ref(np.asarray(s.bufs[0][0])[None],
+                                     np.asarray(s.bufs[1][0])[None],
+                                     s._fsegs)[0]
+            errs += dq - x
+    assert 5.0 * np.abs(errs_e).mean() < np.abs(errs_n).mean()
+
+
+def test_quant8_dense_tiered_host_disk_histories_identical(tmp_path):
+    """Residency stays pure data movement under quantized rows: dense
+    vs tiered-host vs tiered-disk at capacity < N are bit-identical,
+    with identical modeled uplink."""
+    fl = FLConfig(n_clients=8, n_tiers=4, tau=2, rounds=6, mu=0.3,
+                  seed=5, beta=1.1)
+    hd = run_feddct_async(TinyCohortTrainer(), _net(fl), fl, quant_bits=8)
+    hh = run_feddct_async(TinyCohortTrainer(), _net(fl), fl, quant_bits=8,
+                          store_capacity=3)
+    hk = run_feddct_async(TinyCohortTrainer(), _net(fl), fl, quant_bits=8,
+                          store_capacity=3, store_cold_dir=str(tmp_path))
+    _hist_equal(hd, hh)
+    _hist_equal(hd, hk)
+    assert hd.meta["bytes_up"] == hh.meta["bytes_up"] \
+        == hk.meta["bytes_up"]
+    assert hh.meta["store_bytes_cold"] > 0
+    assert hk.meta["store_bytes_cold"] > 0
+
+
 @pytest.mark.slow
 def test_fedasync_windowed_cnn_store_history_identical_to_dict():
     from repro.config import get_arch
@@ -534,3 +757,33 @@ def test_fedasync_windowed_cnn_store_history_identical_to_dict():
                       use_store=False)
     _hist_equal(hs, hd)
     assert hs.meta["mean_cohort"] > 1.0
+
+
+@pytest.mark.slow
+def test_feddct_async_quant8_cnn_convergence_gate():
+    """The quantized-run convergence contract on a seeded CNN task:
+    int8+EF tracks the f32 run within 1.0 accuracy point (best-acc
+    over the run), while actually quantizing (the trajectory is NOT
+    bit-identical to f32) and with EF live (EF on/off trajectories
+    diverge).  The accumulated-bias cost of running WITHOUT EF is
+    asserted deterministically in
+    test_error_feedback_cancels_accumulated_quantization_bias —
+    accuracy at test scale is too noisy to resolve it."""
+    from repro.config import get_arch
+    from repro.fl.client import CNNTrainer
+    fl = FLConfig(n_clients=8, n_tiers=2, tau=2, rounds=40, mu=0.0,
+                  primary_frac=0.7, seed=0, lr=0.003)
+
+    def trainer():
+        return CNNTrainer(get_arch("cnn-mnist").reduced(), fl, "mnist",
+                          scale=0.05)
+
+    h32 = run_feddct_async(trainer(), _net(fl), fl, use_store=True)
+    h8 = run_feddct_async(trainer(), _net(fl), fl, quant_bits=8)
+    h8n = run_feddct_async(trainer(), _net(fl), fl, quant_bits=8,
+                           error_feedback=False)
+    assert abs(max(h32.accuracy) - max(h8.accuracy)) <= 0.01 + 1e-9
+    assert h8.accuracy != h32.accuracy        # quantization is active
+    assert h8.accuracy != h8n.accuracy        # error feedback is live
+    assert h8.meta["quant_bits"] == 8
+    assert h8.meta["bytes_up"] < h32.meta["bytes_up"]
