@@ -14,7 +14,7 @@ import os
 from benchmarks.common import RESULTS_DIR, add_json_arg, maybe_write_json
 from repro.config.base import FLConfig
 from repro.core import run_method
-from repro.fl.client import CNNTrainer, build_fl_clients
+from repro.fl.client import build_fl_clients
 from repro.fl.network import WirelessNetwork
 
 S = dict(n_clients=20, tau=3, rounds=25, mu=0.2, primary_frac=0.7, seed=0,

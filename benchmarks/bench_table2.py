@@ -11,7 +11,6 @@ import argparse
 import json
 import os
 
-import numpy as np
 
 from benchmarks.common import (RESULTS_DIR, add_json_arg, maybe_write_json,
                                run_fl_experiment)

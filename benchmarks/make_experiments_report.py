@@ -13,7 +13,6 @@ import glob
 import json
 import os
 
-import numpy as np
 
 from benchmarks.common import RESULTS_DIR
 from benchmarks.roofline_table import render as render_roofline

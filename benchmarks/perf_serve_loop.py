@@ -10,11 +10,9 @@ Roofline one-off: writes its own results/perf/ records and stays
 outside the ``BENCH_*.json`` / ``compare.py`` bench trajectory.
 """
 
-import dataclasses
 import json
 
 import jax
-import numpy as np
 
 from repro.config import get_arch
 from repro.config.base import INPUT_SHAPES, TrainConfig

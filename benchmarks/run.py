@@ -177,7 +177,7 @@ def main() -> None:
                 if suite is not summarize_dryrun:
                     results[f"{name}_us"] = us
                 notes[name] = derived
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # fedlint: disable=FED007 -- bench driver reports the suite failure and moves on
             print(f"{suite.__name__},-1,ERROR:{e!r}", flush=True)
     maybe_write_json(args, "micro", results,
                      extra_context={"derived": notes})

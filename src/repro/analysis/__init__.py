@@ -1,0 +1,25 @@
+"""`fedlint`: repo-invariant static analysis.
+
+The FL runtime earned a set of hard correctness contracts that no
+generic linter knows about — bit-identical histories across the
+store/dict/tiered paths forbid FMA-contractible ``a*b + c`` shapes in
+merge/quant code (PR 6/9), the donation contract forbids holding
+references into store buffers across a scatter (PR 4), cross-process
+determinism died once on a builtin ``hash(str)`` (PR 5), and the
+telemetry layer's zero-overhead promise dies the moment a call site
+eagerly formats a string (PR 7).  ``repro.analysis`` machine-checks
+those invariants over the AST so a future PR cannot silently regress
+them:
+
+    PYTHONPATH=src python -m repro.analysis.fedlint src tests benchmarks
+
+Rules are registered in :mod:`repro.analysis.rules` (FED001..FED007),
+the waiver syntax (``fedlint: disable=FED00x -- reason`` in a trailing
+comment) lives in :mod:`repro.analysis.waivers`, and the driver + CLI
+in :mod:`repro.analysis.core` / :mod:`repro.analysis.fedlint`.
+"""
+
+from repro.analysis.core import Finding, lint_paths
+from repro.analysis.rules import RULES
+
+__all__ = ["Finding", "lint_paths", "RULES"]

@@ -1,0 +1,591 @@
+"""The FED rule set: each rule codifies a contract a past PR earned
+the hard way.  See ROADMAP.md ("Invariant catalogue") for the one-
+paragraph history of every rule.
+
+| code   | contract                                                    |
+|--------|-------------------------------------------------------------|
+| FED001 | donation: no held store-buffer reference used after scatter |
+| FED002 | no host syncs in hot paths (engine/state/residency/runtime) |
+| FED003 | no FMA-contractible a*b + c in bit-exactness-critical code  |
+| FED004 | telemetry call sites stay zero-overhead + catalogued names  |
+| FED005 | no per-call / in-loop jax.jit without a compile cache       |
+| FED006 | no nondeterminism sources in seeded code paths              |
+| FED007 | no bare/broad exception handlers                            |
+
+Rules are deliberately syntactic: they flag the *shape* that bit us,
+and the waiver syntax (``fedlint: disable=FED00x -- reason`` in a
+trailing comment) is the documented escape hatch for shapes that are
+provably benign in context.  False-positive pressure is tuned by each rule's ``applies``
+path predicate and small structural exemptions, not by weakening the
+pattern.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from repro.analysis.core import (FileContext, Finding, dotted, iter_scopes,
+                                 walk_scope)
+
+RULES: List = []
+
+
+def register(cls):
+    RULES.append(cls())
+    return cls
+
+
+def _in(rel: str, *fragments: str) -> bool:
+    return any(frag in rel for frag in fragments)
+
+
+def _finding(ctx: FileContext, node: ast.AST, code: str,
+             message: str) -> Finding:
+    return Finding(ctx.rel, node.lineno, node.col_offset, code, message,
+                   end_line=getattr(node, "end_lineno", None))
+
+
+# ---------------------------------------------------------------------------
+# FED001 — donation contract (PR 4/6)
+# ---------------------------------------------------------------------------
+
+@register
+class DonationContract:
+    """The store owns its buffers: ``scatter``/``merge_scatter``/
+    ``write_rows`` run buffer-DONATING jitted programs, so a name bound
+    to ``store.buffer``/``store.int_buffer`` before the call aliases
+    freed device memory after it.  ``gather`` returns fresh arrays and
+    is always safe."""
+
+    code = "FED001"
+    title = "store-buffer reference held across a donating scatter"
+
+    _BUF_ATTRS = ("buffer", "int_buffer")
+    _SCATTERS = ("scatter", "merge_scatter", "scatter_params",
+                 "write_rows")
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for scope in iter_scopes(ctx.tree):
+            yield from self._check_scope(ctx, scope)
+
+    def _check_scope(self, ctx, scope):
+        events = []
+        for node in walk_scope(scope):
+            if (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                tgt = node.targets[0].id
+                if (isinstance(node.value, ast.Attribute)
+                        and node.value.attr in self._BUF_ATTRS):
+                    events.append((node.lineno, node.col_offset, 2,
+                                   "bind", tgt, node))
+                else:
+                    events.append((node.lineno, node.col_offset, 2,
+                                   "rebind", tgt, node))
+            elif (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self._SCATTERS):
+                events.append((node.lineno, node.col_offset, 1,
+                               "scatter", None, node))
+            elif isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                           ast.Load):
+                events.append((node.lineno, node.col_offset, 0,
+                               "use", node.id, node))
+        held = {}                       # name -> "fresh" | "stale"
+        for lineno, col, _prio, kind, name, node in sorted(
+                events, key=lambda e: (e[0], e[1], e[2])):
+            if kind == "bind":
+                held[name] = "fresh"
+            elif kind == "rebind":
+                held.pop(name, None)
+            elif kind == "scatter":
+                for k in held:
+                    held[k] = "stale"
+            elif kind == "use" and held.get(name) == "stale":
+                yield _finding(
+                    ctx, node, self.code,
+                    f"`{name}` was bound to a store buffer before a "
+                    "donating scatter/merge_scatter/write_rows call and "
+                    "is used after it — the donated buffer is freed "
+                    "device memory; re-read the property instead "
+                    "(donation contract, PR 4/6)")
+                held.pop(name, None)    # one report per held ref
+
+
+# ---------------------------------------------------------------------------
+# FED002 — host sync in hot paths (PR 4/7)
+# ---------------------------------------------------------------------------
+
+@register
+class HostSyncInHotPath:
+    """The server-step hot path must never block the dispatch pipeline:
+    ``.item()``, ``np.asarray`` on a device value, ``jax.device_get``
+    and ``block_until_ready`` all synchronize the host.  Deliberate
+    blocking points (the residency write-behind, the host cold tiers)
+    are allow-listed per module below; anything else needs a waiver
+    stating why the sync is safe."""
+
+    code = "FED002"
+    title = "host synchronization in a hot-path module"
+
+    _HOT = ("core/engine.py", "core/state.py", "core/residency.py",
+            "/runtime/")
+    # module-scoped allowlist: enclosing function or class names that
+    # ARE deliberate host blocking points (documented in ROADMAP).
+    _ALLOW = {
+        "core/residency.py": {"HostColdTier", "DiskColdTier",
+                              "_ensure_hot", "_host_rows",
+                              "_scatter_row", "__init__"},
+        "core/state.py": {"_ids", "_ef_update", "_ef_block", "__init__"},
+    }
+    _NP_SYNCS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+    # host-data literals: packing a python list/comprehension is not a
+    # device readback, so asarray over them is exempt structurally
+    _HOST_ARGS = (ast.List, ast.Tuple, ast.ListComp, ast.GeneratorExp,
+                  ast.Constant, ast.Dict)
+
+    def applies(self, rel: str) -> bool:
+        return _in(rel, *self._HOT)
+
+    def _allowed(self, ctx: FileContext, node: ast.AST) -> bool:
+        allow: Set[str] = set()
+        for frag, names in self._ALLOW.items():
+            if frag in ctx.rel:
+                allow |= names
+        if not allow:
+            return False
+        for fn in ctx.enclosing_functions(node):
+            if fn.name in allow:
+                return True
+        cls = ctx.enclosing_class(node)
+        return cls is not None and cls.name in allow
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            msg = self._classify(node)
+            if msg and not self._allowed(ctx, node):
+                yield _finding(ctx, node, self.code, msg)
+
+    def _classify(self, node: ast.Call) -> Optional[str]:
+        name = dotted(node.func)
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr == "item" and not node.args:
+                return (".item() synchronizes the host on the device "
+                        "value — keep the guard on device (lax.cond) or "
+                        "waive with the reason the sync is deliberate")
+            if node.func.attr == "block_until_ready":
+                return ("block_until_ready() stalls the dispatch "
+                        "pipeline — hot paths must stay async")
+        if name in ("jax.device_get",):
+            return ("jax.device_get synchronizes the host — hot paths "
+                    "must stay async")
+        if name in self._NP_SYNCS:
+            if node.args and isinstance(node.args[0], self._HOST_ARGS):
+                return None             # packing host data, not a sync
+            return (f"{name} on a possibly-device value forces a "
+                    "device->host transfer in a hot-path module — if "
+                    "the argument is host data or the block is a "
+                    "deliberate blocking point, waive with that reason")
+        if isinstance(node.func, ast.Name) and node.func.id in ("float",
+                                                                "int"):
+            if any(isinstance(n, ast.Name) and n.id in ("jnp", "jax",
+                                                        "lax")
+                   for a in node.args for n in ast.walk(a)):
+                return (f"{node.func.id}() on a traced/jax expression "
+                        "synchronizes the host in a hot-path module")
+        return None
+
+
+# ---------------------------------------------------------------------------
+# FED003 — FMA-contraction hazard (PR 6/9)
+# ---------------------------------------------------------------------------
+
+@register
+class FmaContractionHazard:
+    """XLA CPU contracts ``a*b + c`` into an FMA *differently per
+    compilation unit and per shape* (proved experimentally in PR 6:
+    (3,P) vs (6,P) merges drift 1 ulp ~30% of trials; PR 9 proved
+    ``optimization_barrier`` does NOT stop it).  Bit-exactness-critical
+    code must not write the shape at all — restructure as an add
+    feeding a mul (the quant path's ``(q + snap) * scale``) or dispatch
+    one standalone program for the whole reduction."""
+
+    code = "FED003"
+    title = "FMA-contractible a*b + c in bit-exactness-critical code"
+
+    def applies(self, rel: str) -> bool:
+        return _in(rel, "/kernels/", "core/state.py")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        state_mode = "core/state.py" in ctx.rel
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, (ast.Add, ast.Sub))):
+                continue
+            if not self._has_mult_operand(node):
+                continue
+            if state_mode and not self._traced_context(ctx, node):
+                continue                # host int bookkeeping, not math
+            yield _finding(
+                ctx, node, self.code,
+                "a*b + c is FMA-contractible: XLA fuses it differently "
+                "per compilation unit, drifting bits across store/dict/"
+                "tiered paths — restructure (add feeding a mul, or one "
+                "standalone merge program) or waive with the reason "
+                "this expression is not bit-identity-gated")
+
+    @staticmethod
+    def _has_mult_operand(node: ast.BinOp) -> bool:
+        for side in (node.left, node.right):
+            if (isinstance(side, ast.BinOp)
+                    and isinstance(side.op, ast.Mult)
+                    # sequence repetition `(1,) * n` is tuple algebra
+                    and not any(isinstance(s, (ast.Tuple, ast.List))
+                                for s in (side.left, side.right))):
+                return True
+        return False
+
+    @staticmethod
+    def _traced_context(ctx: FileContext, node: ast.AST) -> bool:
+        """In core/state.py only functions that touch jnp/lax are
+        traced numerics; byte-count arithmetic over python ints cannot
+        drift and stays exempt."""
+        fns = ctx.enclosing_functions(node)
+        scope = fns[0] if fns else ctx.tree
+        return any(isinstance(n, ast.Name) and n.id in ("jnp", "lax")
+                   for n in ast.walk(scope))
+
+
+# ---------------------------------------------------------------------------
+# FED004 — telemetry overhead + catalogue drift (PR 7/8)
+# ---------------------------------------------------------------------------
+
+@register
+class TelemetryOverhead:
+    """``obs.TEL`` is a no-op singleton when tracing is off, but python
+    evaluates arguments EAGERLY: an f-string, ``.format``/``%`` call,
+    or any non-trivial call in the argument list runs on every
+    invocation and breaks the zero-overhead contract.  Heavy arguments
+    are fine behind an ``enabled`` guard (ancestor ``if tel.enabled:``
+    or an early ``if not tel.enabled: return``).  Literal span/metric
+    names must come from the documented catalogue
+    (``repro.obs.catalogue``) so traces, the validator and
+    ``obs.report`` never see an unknown stream."""
+
+    code = "FED004"
+    title = "eager work or uncatalogued name at a telemetry call site"
+
+    _METHODS = ("span", "inc", "gauge", "observe")
+    _CHEAP_CALLS = {"len", "int", "float", "bool"}
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    # -- handle discovery ----------------------------------------------
+    def _handles(self, scope) -> Set[str]:
+        """Names that hold the active telemetry in this scope: assigned
+        from ``*.TEL``, plus the repo-wide ``tel``/``TEL`` convention."""
+        names = {"tel", "TEL"}
+        for node in walk_scope(scope):
+            if (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                src = dotted(node.value)
+                if src is not None and (src == "TEL"
+                                        or src.endswith(".TEL")):
+                    names.add(node.targets[0].id)
+        return names
+
+    def _is_tel_call(self, node: ast.Call, handles: Set[str]) -> bool:
+        if not (isinstance(node.func, ast.Attribute)
+                and node.func.attr in self._METHODS):
+            return False
+        recv = dotted(node.func.value)
+        if recv is None:
+            return False
+        return (recv in handles or recv == "TEL"
+                or recv.endswith(".TEL"))
+
+    # -- enabled-guard detection ---------------------------------------
+    @staticmethod
+    def _mentions_enabled(node: ast.AST) -> bool:
+        return any(isinstance(n, ast.Attribute) and n.attr == "enabled"
+                   for n in ast.walk(node))
+
+    def _guarded(self, ctx: FileContext, node: ast.AST) -> bool:
+        for a in ctx.ancestors(node):
+            if isinstance(a, ast.If) and self._mentions_enabled(a.test):
+                return True
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # early `if not tel.enabled: return` above the call
+                for stmt in a.body:
+                    if (isinstance(stmt, ast.If)
+                            and stmt.lineno < node.lineno
+                            and self._mentions_enabled(stmt.test)
+                            and any(isinstance(s, ast.Return)
+                                    for s in stmt.body)):
+                        return True
+                return False
+        return False
+
+    # -- checks ---------------------------------------------------------
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for scope in iter_scopes(ctx.tree):
+            handles = self._handles(scope)
+            for node in walk_scope(scope):
+                if (isinstance(node, ast.Call)
+                        and self._is_tel_call(node, handles)):
+                    yield from self._check_call(ctx, node)
+
+    def _check_call(self, ctx, node: ast.Call):
+        guarded = self._guarded(ctx, node)
+        if not guarded:
+            for arg in list(node.args) + [kw.value for kw in
+                                          node.keywords]:
+                msg = self._eager(arg)
+                if msg:
+                    yield _finding(
+                        ctx, node, self.code,
+                        f"{msg} at an unguarded obs.TEL.{node.func.attr} "
+                        "call site — arguments evaluate eagerly even "
+                        "when tracing is off; guard with `if "
+                        "tel.enabled:` or precompute (zero-overhead "
+                        "contract, PR 7)")
+        # catalogue membership is a production contract: tests and
+        # benchmarks may record synthetic names, library code may not
+        if ("repro/" in ctx.rel
+                and node.args and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            yield from self._check_name(ctx, node,
+                                        node.args[0].value)
+
+    def _eager(self, arg: ast.AST) -> Optional[str]:
+        for n in ast.walk(arg):
+            if isinstance(n, ast.JoinedStr) and any(
+                    isinstance(v, ast.FormattedValue) for v in n.values):
+                return "eager f-string formatting"
+            if (isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+                    and isinstance(n.left, ast.Constant)
+                    and isinstance(n.left.value, str)):
+                return "eager %-formatting"
+            if isinstance(n, ast.Call):
+                if (isinstance(n.func, ast.Attribute)
+                        and n.func.attr == "format"):
+                    return "eager .format() call"
+                if not (isinstance(n.func, ast.Name)
+                        and n.func.id in self._CHEAP_CALLS):
+                    callee = dotted(n.func) or "<call>"
+                    return f"call-bearing argument ({callee}(...))"
+        return None
+
+    def _check_name(self, ctx, node: ast.Call, name: str):
+        try:
+            from repro.obs import catalogue
+        except ImportError:             # pragma: no cover
+            return
+        kind = node.func.attr
+        known = {"span": catalogue.SPANS, "inc": catalogue.COUNTERS,
+                 "gauge": catalogue.GAUGES,
+                 "observe": catalogue.HISTS}[kind]
+        base = name.split("{", 1)[0]
+        if base in known:
+            return
+        if kind == "inc" and base.startswith(catalogue.COUNTER_PREFIXES):
+            return
+        yield _finding(
+            ctx, node, self.code,
+            f"{kind} name {name!r} is not in the documented telemetry "
+            "catalogue (repro.obs.catalogue) — add it there (and to the "
+            "ROADMAP span/counter lists) or fix the typo")
+
+
+# ---------------------------------------------------------------------------
+# FED005 — recompile hazard (PR 1/4)
+# ---------------------------------------------------------------------------
+
+@register
+class RecompileHazard:
+    """``jax.jit`` called per-invocation builds a fresh traced program
+    every time: in a loop or an uncached function body it recompiles on
+    every call (the store's programs are ``lru_cache``d per layout for
+    exactly this reason).  Cache evidence accepted: an enclosing
+    ``lru_cache``/``cache`` decorator, ``__init__`` (compile-once-per-
+    object), a dict-cache store (`CACHE[key] = ...`), or assignment
+    onto ``self``."""
+
+    code = "FED005"
+    title = "jax.jit without a compile cache"
+
+    def applies(self, rel: str) -> bool:
+        return "repro/" in rel and "/launch/" not in rel
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name not in ("jax.jit", "jit", "pjit", "jax.pjit"):
+                continue
+            fns = ctx.enclosing_functions(node)
+            in_loop = ctx.in_loop(node) or (
+                not fns and any(isinstance(a, (ast.For, ast.While))
+                                for a in ctx.ancestors(node)))
+            if not fns and not in_loop:
+                continue                # module scope compiles once
+            if fns and self._cached(ctx, node, fns):
+                continue
+            where = ("inside a loop" if in_loop
+                     else f"in the per-call body of `{fns[0].name}`")
+            yield _finding(
+                ctx, node, self.code,
+                f"{name}(...) {where} builds a fresh program every "
+                "call — hoist to module scope, lru_cache the builder, "
+                "or store the program in a dict/attribute cache "
+                "(recompile hazard)")
+
+    @staticmethod
+    def _cached(ctx: FileContext, node: ast.AST, fns) -> bool:
+        for fn in fns:
+            if fn.name in ("__init__", "__post_init__"):
+                return True
+            for dec in fn.decorator_list:
+                if any(isinstance(n, (ast.Name, ast.Attribute))
+                       and getattr(n, "id", getattr(n, "attr", None))
+                       in ("lru_cache", "cache")
+                       for n in ast.walk(dec)):
+                    return True
+        # dict-cache idiom anywhere in the outermost enclosing def:
+        # the jit result flows into a subscript/self-attribute store
+        outer = fns[-1]
+        for n in ast.walk(outer):
+            if isinstance(n, ast.Assign) and any(
+                    isinstance(t, ast.Subscript)
+                    or (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self")
+                    for t in n.targets):
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# FED006 — nondeterminism sources (PR 5)
+# ---------------------------------------------------------------------------
+
+@register
+class NondeterminismSource:
+    """Cross-process byte-identity (gated in test_fl_integration) died
+    once on builtin ``hash(str)`` — PYTHONHASHSEED salts it per
+    process.  Seeded code paths must not consult process-dependent or
+    wall-clock entropy: use ``zlib.crc32``/hashlib for stable salts
+    and explicit ``np.random.default_rng``/``PCG64`` streams."""
+
+    code = "FED006"
+    title = "nondeterminism source in a seeded code path"
+
+    _NP_DEFAULT = {"seed", "rand", "randn", "randint", "random",
+                   "choice", "shuffle", "permutation", "normal",
+                   "uniform", "standard_normal", "random_sample",
+                   "get_state", "set_state"}
+    _PY_RANDOM = {"random", "randint", "randrange", "choice", "choices",
+                  "shuffle", "sample", "uniform", "gauss", "seed",
+                  "getrandbits"}
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        in_bench = _in(ctx.rel, "benchmarks/")
+        in_timing_ok = in_bench or _in(ctx.rel, "/launch/", "tests/")
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id == "hash"):
+                yield _finding(
+                    ctx, node, self.code,
+                    "builtin hash() is PYTHONHASHSEED-salted per "
+                    "process (PR 5's cross-process bug) — use "
+                    "zlib.crc32 or hashlib for a stable salt")
+            elif name == "time.time" and not in_timing_ok:
+                yield _finding(
+                    ctx, node, self.code,
+                    "time.time() in a seeded code path — simulated "
+                    "time must come from the EventQueue virtual clock; "
+                    "host timing belongs in benchmarks/launch "
+                    "(perf_counter)")
+            elif name is not None and self._np_default(name):
+                yield _finding(
+                    ctx, node, self.code,
+                    f"{name}() uses numpy's process-global default RNG "
+                    "— thread an explicit np.random.default_rng(seed) "
+                    "stream instead")
+            elif (name is not None and name.startswith("random.")
+                    and name.split(".")[1] in self._PY_RANDOM):
+                yield _finding(
+                    ctx, node, self.code,
+                    f"{name}() uses the stdlib global RNG — thread an "
+                    "explicit seeded generator instead")
+            elif (name is not None and not in_bench
+                    and (name.endswith("datetime.now")
+                         or name.endswith("datetime.utcnow")
+                         or name.endswith("datetime.today")
+                         or name.endswith("date.today"))):
+                yield _finding(
+                    ctx, node, self.code,
+                    f"{name}() reads civil time in a seeded code path "
+                    "— timestamps belong in benchmarks or run metadata")
+
+    def _np_default(self, name: str) -> bool:
+        parts = name.split(".")
+        return (len(parts) == 3 and parts[0] in ("np", "numpy")
+                and parts[1] == "random"
+                and parts[2] in self._NP_DEFAULT)
+
+
+# ---------------------------------------------------------------------------
+# FED007 — bare/broad exception handlers
+# ---------------------------------------------------------------------------
+
+@register
+class BroadExcept:
+    """A bare ``except:`` or ``except Exception:`` swallows
+    KeyboardInterrupt-adjacent failures and — worse here — XLA/jax
+    errors that signal a numerics contract break.  Narrow the type, or
+    waive with the reason the broad catch is load-bearing (e.g. a
+    sweep harness that records per-item failures and continues)."""
+
+    code = "FED007"
+    title = "bare or broad exception handler"
+
+    _BROAD = ("Exception", "BaseException")
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield _finding(ctx, node, self.code,
+                               "bare `except:` — name the exception "
+                               "types this handler is meant to catch")
+                continue
+            broad = [dotted(t) for t in
+                     (node.type.elts if isinstance(node.type, ast.Tuple)
+                      else [node.type])]
+            hit = [b for b in broad if b in self._BROAD]
+            if hit:
+                yield _finding(
+                    ctx, node, self.code,
+                    f"`except {hit[0]}` is too broad — narrow to the "
+                    "failure types this site expects, or waive with "
+                    "the reason the catch-all is deliberate")

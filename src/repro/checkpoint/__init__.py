@@ -1,3 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.ckpt import latest_step, load_checkpoint, save_checkpoint
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

@@ -11,7 +11,7 @@ import json
 import os
 import re
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -1,12 +1,12 @@
 from repro.config.base import (
-    ModelConfig,
     FLConfig,
-    MeshConfig,
-    TrainConfig,
     InputShape,
-    register_arch,
+    MeshConfig,
+    ModelConfig,
+    TrainConfig,
     get_arch,
     list_archs,
+    register_arch,
 )
 
 __all__ = [

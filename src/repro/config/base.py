@@ -10,8 +10,8 @@ CPU-smoke-test variant of any config (<=2 layers, d_model<=512,
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configs

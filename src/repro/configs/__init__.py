@@ -1,16 +1,16 @@
 """Registers all selectable architectures (``--arch <id>``)."""
 
 from repro.configs import (  # noqa: F401
+    arctic_480b,
+    chameleon_34b,
     granite_20b,
-    nemotron_4_340b,
-    phi4_mini_3_8b,
-    llama3_2_1b,
-    mixtral_8x7b,
     hubert_xlarge,
     hymba_1_5b,
-    arctic_480b,
-    xlstm_350m,
-    chameleon_34b,
+    llama3_2_1b,
+    mixtral_8x7b,
+    nemotron_4_340b,
     paper_models,
+    phi4_mini_3_8b,
+    xlstm_350m,
 )
 from repro.configs.shapes import INPUT_SHAPES  # noqa: F401

@@ -1,18 +1,18 @@
-from repro.core.tiering import tiering, update_avg_time, evaluate_client
-from repro.core.selection import cstt, tier_timeouts, move_tier, select_from_tier
 from repro.core.aggregation import (aggregate_or_keep,
-                                    weighted_average,
-                                    weighted_average_stacked,
                                     staleness_merge,
-                                    staleness_weighted_merge)
+                                    staleness_weighted_merge,
+                                    weighted_average,
+                                    weighted_average_stacked)
+from repro.core.baselines import (run_fedasync, run_fedasync_sequential,
+                                  run_fedavg, run_fedbuff,
+                                  run_feddct_async, run_fedprox,
+                                  run_method, run_tifl)
 from repro.core.engine import BatchedClientEngine, make_engine
 from repro.core.residency import TieredClientStateStore
-from repro.core.state import ClientStateStore
 from repro.core.scheduler import run_feddct
-from repro.core.baselines import (run_fedavg, run_tifl, run_fedasync,
-                                  run_fedasync_sequential, run_fedbuff,
-                                  run_feddct_async, run_fedprox,
-                                  run_method)
+from repro.core.selection import cstt, move_tier, select_from_tier, tier_timeouts
+from repro.core.state import ClientStateStore
+from repro.core.tiering import evaluate_client, tiering, update_avg_time
 
 __all__ = [
     "tiering", "update_avg_time", "evaluate_client",

@@ -33,7 +33,7 @@ degenerate case of ``staleness_weighted_merge``).
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -186,7 +186,8 @@ class BatchedClientEngine:
                                                 rnd_seed)
         if stacked is None:
             return params
-        w = sizes if weights is None else np.asarray(weights, np.float32)
+        w = sizes if weights is None else np.asarray(  # fedlint: disable=FED002 -- weights is a host Sequence[float] from the caller, packing not a device readback
+            weights, np.float32)
         with tel.span("round.aggregate", cohort=len(client_ids)):
             return self.aggregate_or_keep(params, stacked, w)
 

@@ -333,7 +333,9 @@ class TieredClientStateStore(ClientStateStore):
             self._slots[c] = slot
             staged.append((c, slot))
         tel = obs.TEL
-        if n_hit:
+        # the kind-tagged counter names are f-formatted: build them only
+        # while tracing (zero-overhead contract — FED004)
+        if tel.enabled and n_hit:
             tel.inc(f"residency.{kind}_hit", n_hit)
         if n_evict_clean:
             tel.inc("residency.evict_clean", n_evict_clean)
@@ -354,7 +356,8 @@ class TieredClientStateStore(ClientStateStore):
                 self.bufs = self._fns.write_rows(
                     self.bufs, self._ids([s for _, s in staged]),
                     cblocks)
-            tel.inc(f"residency.{kind}_promote", len(staged))
+            if tel.enabled:
+                tel.inc(f"residency.{kind}_promote", len(staged))
             self.n_promoted += len(staged)
         return [c for c, _ in staged]
 

@@ -17,7 +17,7 @@ per-tier timeouts — exactly the set FedDCT's Eq. 5/6 freezes.
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -578,7 +578,7 @@ class ClientStateStore:
         construction.
         """
         tel = obs.TEL
-        coef = jnp.asarray(np.asarray(coef, np.float32))
+        coef = jnp.asarray(np.asarray(coef, np.float32))  # fedlint: disable=FED002 -- coef is the host numpy staleness-coefficient vector, packing not a device readback
         with tel.span("store.merge", rows=len(ids), kernel=use_kernel):
             if use_kernel:
                 interp = on_cpu() if interpret is None else bool(interpret)

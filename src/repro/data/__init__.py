@@ -1,10 +1,10 @@
-from repro.data.synthetic import make_image_dataset, make_token_dataset
 from repro.data.partition import (
-    primary_class_partition,
     dirichlet_partition,
     iid_partition,
+    primary_class_partition,
 )
 from repro.data.pipeline import ClientDataset, client_batches
+from repro.data.synthetic import make_image_dataset, make_token_dataset
 
 __all__ = [
     "make_image_dataset", "make_token_dataset",

@@ -12,7 +12,7 @@ claims (FedDCT vs baselines) are preserved (DESIGN.md §2).
 from __future__ import annotations
 
 import zlib
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

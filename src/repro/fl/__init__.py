@@ -1,6 +1,6 @@
-from repro.fl.network import WirelessNetwork
 from repro.fl.client import CNNTrainer, LMTrainer, build_fl_clients
 from repro.fl.metrics import RunHistory
+from repro.fl.network import WirelessNetwork
 
 __all__ = ["WirelessNetwork", "CNNTrainer", "LMTrainer", "build_fl_clients",
            "RunHistory"]

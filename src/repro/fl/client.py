@@ -14,7 +14,6 @@ Eq. 3 tier movement exactly like test accuracy does for CNNs.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -22,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import FLConfig, ModelConfig
-from repro.data.pipeline import ClientDataset, client_batches
 from repro.data.partition import primary_class_partition
+from repro.data.pipeline import ClientDataset, client_batches
 from repro.data.synthetic import make_image_dataset, make_token_dataset
 from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
 from repro.models.transformer import forward as lm_forward

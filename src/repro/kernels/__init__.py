@@ -1,11 +1,11 @@
 from repro.kernels.ops import (
-    gqa_flash_attention,
-    ssm_scan_op,
-    fedagg_op,
-    fedagg_pytree,
     fedagg_fold_op,
     fedagg_fold_pytree,
+    fedagg_op,
     fedagg_partial_op,
+    fedagg_pytree,
+    gqa_flash_attention,
+    ssm_scan_op,
 )
 
 __all__ = ["gqa_flash_attention", "ssm_scan_op", "fedagg_op",

@@ -45,8 +45,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
-    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
-    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset  # fedlint: disable=FED003 -- int32 index arithmetic, exact regardless of FMA contraction
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)  # fedlint: disable=FED003 -- int32 index arithmetic, exact regardless of FMA contraction
     mask = jnp.ones((bq, bk), bool)
     if causal:
         mask &= k_pos <= q_pos
@@ -58,8 +58,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
     p = jnp.exp(s - m_new[:, None])
     corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-    acc_ref[...] = (acc_ref[...] * corr[:, None]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)  # fedlint: disable=FED003 -- online-softmax rescale; kernel is tolerance-tested vs the reference, not bit-identity-gated
+    acc_ref[...] = (acc_ref[...] * corr[:, None]  # fedlint: disable=FED003 -- online-softmax rescale; kernel is tolerance-tested vs the reference, not bit-identity-gated
                     + jax.lax.dot(p.astype(v.dtype), v,
                                   preferred_element_type=jnp.float32))
     m_ref[...] = m_new

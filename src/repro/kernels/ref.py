@@ -36,7 +36,7 @@ def ssm_scan_ref(x, dt, b_in, c_out, a_log):
         xt, dtt, bt, ct = inp
         da = jnp.exp(dtt[:, :, None] * a_neg[None])          # (B,D,N)
         dbx = (dtt * xt)[:, :, None] * bt[:, None, :]
-        h = da * h + dbx
+        h = da * h + dbx  # fedlint: disable=FED003 -- SSM recurrence in the reference oracle; kernels are tolerance-gated against it, not bit-identity-gated
         y = jnp.einsum("bdn,bn->bd", h, ct)
         return h, y
 

@@ -28,11 +28,11 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
-from repro.config import get_arch, list_archs
+from repro.config import get_arch
 from repro.config.base import INPUT_SHAPES, InputShape, ModelConfig, TrainConfig
-from repro.launch.mesh import make_production_mesh
 from repro.launch import steps as steps_lib
-from repro.roofline import analyze_hlo, roofline_terms, TPU_V5E
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analyze_hlo, roofline_terms
 from repro.sharding import (batch_specs, decode_state_specs, named_shardings,
                             param_specs)
 from repro.sharding.hints import set_mesh
@@ -46,7 +46,6 @@ ASSIGNED = [
 # The BASELINE sharding config for the roofline table: megatron TP + FSDP
 # without any of the §Perf hillclimb optimizations (those are recorded
 # separately by benchmarks/perf_iterate.py).
-import dataclasses as _dc
 BASELINE_TCFG = TrainConfig(context_parallel="never", seq_parallel=False,
                             long_ctx_swa=False, decode_headdim_shard=False)
 
@@ -211,7 +210,7 @@ def main():
                     continue
                 try:
                     rec = run_one(arch, shape, mp)
-                except Exception as e:  # noqa: BLE001 — record, keep going
+                except Exception as e:  # fedlint: disable=FED007 -- sweep harness records the per-arch failure and continues
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "2x16x16" if mp else "16x16",
                            "status": "error", "error": repr(e),

@@ -12,8 +12,6 @@ delay/failure model supplies virtual time exactly as for the CNN runs.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
 from repro.config.base import FLConfig
 from repro.core import run_method

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import get_arch
-from repro.models import decode_step, forward, init_decode_state, init_model
+from repro.models import decode_step, init_decode_state, init_model
 
 
 def main(argv=None):

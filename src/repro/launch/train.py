@@ -12,8 +12,6 @@ This is the substrate the FL layer drives; it is also example (b)'s
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import time
 
 import jax
@@ -25,8 +23,7 @@ from repro.config import get_arch
 from repro.config.base import TrainConfig
 from repro.data.synthetic import make_token_dataset
 from repro.launch.steps import make_train_step
-from repro.optim import make_optimizer
-from repro.sharding import batch_specs, named_shardings, param_specs
+from repro.sharding import named_shardings, param_specs
 from repro.sharding.hints import set_mesh
 
 

@@ -1,11 +1,11 @@
+from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
 from repro.models.transformer import (
-    init_model,
-    forward,
     decode_step,
+    forward,
     init_decode_state,
+    init_model,
     lm_loss,
 )
-from repro.models.cnn import init_cnn, cnn_forward, cnn_loss
 
 __all__ = [
     "init_model", "forward", "decode_step", "init_decode_state", "lm_loss",

@@ -23,9 +23,7 @@ All softmax math is float32; inputs/outputs keep their dtype.
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Dropped tokens pass through the residual only (standard capacity-drop).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

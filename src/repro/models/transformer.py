@@ -15,9 +15,7 @@ Families:
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ def _meta_header(tel: Telemetry) -> Dict:
         ctx["jax"] = jax.__version__
         ctx["backend"] = jax.default_backend()
         ctx["device_count"] = jax.device_count()
-    except Exception:                                      # pragma: no cover
+    except (ImportError, AttributeError, RuntimeError):    # pragma: no cover
         pass
     return ctx
 

@@ -1,13 +1,13 @@
 from repro.optim.optimizer import (
-    make_optimizer,
-    sgd,
-    momentum,
     adam,
     adamw,
-    cosine_schedule,
-    linear_warmup_cosine,
     clip_by_global_norm,
+    cosine_schedule,
     global_norm,
+    linear_warmup_cosine,
+    make_optimizer,
+    momentum,
+    sgd,
 )
 
 __all__ = [

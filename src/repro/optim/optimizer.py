@@ -10,9 +10,7 @@ dtype (mixed-precision-safe); the FSDP sharding rules in
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

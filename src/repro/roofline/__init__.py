@@ -1,8 +1,8 @@
 from repro.roofline.analysis import (
+    TPU_V5E,
+    HWSpec,
     analyze_hlo,
     roofline_terms,
-    HWSpec,
-    TPU_V5E,
 )
 
 __all__ = ["analyze_hlo", "roofline_terms", "HWSpec", "TPU_V5E"]

@@ -14,9 +14,9 @@ Three pieces, composable from the bottom up:
   per-tier timeouts reinterpreted as window deadlines).
 """
 
+from repro.runtime.async_loop import AsyncRunner, run_feddct_async
 from repro.runtime.buffer import AggregationBuffer
 from repro.runtime.events import ClientEvent, EventQueue
-from repro.runtime.async_loop import AsyncRunner, run_feddct_async
 
 __all__ = ["AggregationBuffer", "ClientEvent", "EventQueue",
            "AsyncRunner", "run_feddct_async"]

@@ -1,8 +1,8 @@
 from repro.sharding.rules import (
-    param_specs,
     batch_specs,
     decode_state_specs,
     named_shardings,
+    param_specs,
 )
 
 __all__ = ["param_specs", "batch_specs", "decode_state_specs",

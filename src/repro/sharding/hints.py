@@ -12,7 +12,6 @@ hint is the identity.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import numpy as np

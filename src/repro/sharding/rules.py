@@ -22,7 +22,7 @@ are never sharded.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import numpy as np

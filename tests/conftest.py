@@ -1,4 +1,3 @@
-import os
 
 # A forced host device count (the distributed suite's
 # XLA_FLAGS=--xla_force_host_platform_device_count=8 run) is only

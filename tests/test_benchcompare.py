@@ -4,7 +4,6 @@ committed baselines gating against themselves."""
 
 from __future__ import annotations
 
-import copy
 import json
 import os
 import sys

@@ -7,7 +7,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.data import (client_batches, dirichlet_partition, iid_partition,
+from repro.data import (client_batches, dirichlet_partition,
                         make_image_dataset, make_token_dataset,
                         primary_class_partition)
 from repro.data.pipeline import ClientDataset

@@ -13,7 +13,6 @@ with:
 ``distributed-8dev`` job runs exactly this invocation.)
 """
 
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,735 @@
+"""fedlint: fixture-driven rule tests, waiver parser, CLI/JSON schema,
+and the self-check gate (the shipped tree must lint clean).
+
+Fixture sources are written to tmp files and linted under a chosen
+*display* path, because most rules scope by relative path (FED002 only
+fires in hot-path modules, FED003 only in kernels/state, ...).  Waiver
+comments inside fixtures are built by string concatenation so this
+file's own raw lines never match the waiver scanner.
+"""
+
+from __future__ import annotations
+
+import json
+import textwrap
+
+from repro import obs
+from repro.analysis.core import lint_file
+from repro.analysis.fedlint import main as fedlint_main
+from repro.analysis.rules import RULES
+from repro.analysis.waivers import META_RULE, parse_waivers
+from repro.obs import catalogue, flstats
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+ALL_CODES = {r.code for r in RULES}
+
+
+def waive(codes: str, reason: str = "fixture-approved") -> str:
+    # concatenated so this test file's source never contains a literal
+    # waiver comment (the scanner reads raw lines, not the AST)
+    return "# fed" + "lint: disable=" + codes + " -- " + reason
+
+
+def lint(tmp_path, src: str, rel: str, select=None):
+    p = tmp_path / "fx.py"
+    p.write_text(textwrap.dedent(src))
+    rules = RULES if select is None else [r for r in RULES
+                                          if r.code in select]
+    return lint_file(str(p), rel, rules)
+
+
+def only(findings, code: str):
+    return [f for f in findings if f.rule == code]
+
+
+def unwaived(findings, code: str):
+    return [f for f in findings if f.rule == code and not f.waived]
+
+
+# ---------------------------------------------------------------------------
+# waiver parser
+# ---------------------------------------------------------------------------
+
+def test_waiver_parse_codes_and_reason():
+    ws = parse_waivers(["x = 1  " + waive("FED001,FED002", "two codes")])
+    assert list(ws) == [1]
+    w = ws[1]
+    assert w.codes == ("FED001", "FED002")
+    assert w.reason == "two codes"
+    assert w.valid and not w.used
+
+
+def test_waiver_missing_reason_is_invalid():
+    ws = parse_waivers(["x = 1  # fed" + "lint: disable=FED001"])
+    assert not ws[1].valid
+    assert any("reason" in p for p in ws[1].problems)
+
+
+def test_waiver_malformed_code_is_invalid():
+    ws = parse_waivers(["x = 1  " + waive("BOGUS", "oops")])
+    assert any("malformed" in p for p in ws[1].problems)
+
+
+def test_waiver_empty_codes_is_invalid():
+    ws = parse_waivers(["x = 1  # fed" + "lint: disable= -- why"])
+    assert any("no rule codes" in p for p in ws[1].problems)
+
+
+def test_unused_waiver_is_meta_finding(tmp_path):
+    fs = lint(tmp_path, "x = 1  " + waive("FED006", "nothing here") + "\n",
+              "src/repro/core/fx.py")
+    assert any("unused waiver" in f.message for f in only(fs, META_RULE))
+
+
+def test_unused_waiver_silent_when_rule_not_active(tmp_path):
+    fs = lint(tmp_path, "x = 1  " + waive("FED006", "nothing here") + "\n",
+              "src/repro/core/fx.py", select={"FED007"})
+    assert not only(fs, META_RULE)
+
+
+def test_syntax_error_is_meta_finding(tmp_path):
+    fs = lint(tmp_path, "def broken(:\n", "src/repro/core/fx.py")
+    assert only(fs, META_RULE)
+    assert "syntax error" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# FED001 — donation contract
+# ---------------------------------------------------------------------------
+
+FED001_POS = """
+    def flush(store, ids, rows):
+        buf = store.buffer
+        store.merge_scatter(ids, rows)
+        return buf.sum()
+"""
+
+
+def test_fed001_use_after_scatter(tmp_path):
+    fs = lint(tmp_path, FED001_POS, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED001")) == 1
+    assert "donation contract" in fs[0].message
+
+
+def test_fed001_use_before_scatter_ok(tmp_path):
+    src = """
+        def flush(store, ids, rows):
+            buf = store.buffer
+            total = buf.sum()
+            store.merge_scatter(ids, rows)
+            fresh = store.gather(ids)
+            return total + fresh.sum()
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"), "FED001")
+
+
+def test_fed001_rebind_clears_held_ref(tmp_path):
+    src = """
+        def flush(store, ids, rows):
+            buf = store.buffer
+            buf = rows
+            store.merge_scatter(ids, rows)
+            return buf.sum()
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"), "FED001")
+
+
+def test_fed001_waived(tmp_path):
+    src = FED001_POS.replace("return buf.sum()",
+                             "return buf.sum()  "
+                             + waive("FED001", "store not donating here"))
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert not unwaived(fs, "FED001")
+    assert only(fs, "FED001")[0].waived
+
+
+# ---------------------------------------------------------------------------
+# FED002 — host sync in hot paths
+# ---------------------------------------------------------------------------
+
+def test_fed002_item_in_hot_module(tmp_path):
+    src = """
+        def poll(x):
+            return x.item()
+    """
+    fs = lint(tmp_path, src, "src/repro/core/engine.py")
+    assert len(unwaived(fs, "FED002")) == 1
+    assert ".item()" in fs[0].message
+
+
+def test_fed002_not_applied_outside_hot_paths(tmp_path):
+    src = """
+        def poll(x):
+            return x.item()
+    """
+    assert not only(lint(tmp_path, src, "src/repro/fl/network.py"),
+                    "FED002")
+
+
+def test_fed002_asarray_host_literal_exempt(tmp_path):
+    src = """
+        import numpy as np
+
+        def pack(xs):
+            return np.asarray([x for x in xs])
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/engine.py"),
+                    "FED002")
+
+
+def test_fed002_asarray_device_value_flagged(tmp_path):
+    src = """
+        import numpy as np
+
+        def pull(dev_rows):
+            return np.asarray(dev_rows)
+    """
+    fs = lint(tmp_path, src, "src/repro/core/engine.py")
+    assert len(unwaived(fs, "FED002")) == 1
+
+
+def test_fed002_residency_allowlist(tmp_path):
+    src = """
+        import numpy as np
+
+        def _ensure_hot(self, rows):
+            return np.asarray(rows)
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/residency.py"),
+                    "FED002")
+
+
+def test_fed002_float_on_traced_and_block_until_ready(tmp_path):
+    src = """
+        import jax.numpy as jnp
+
+        def norm(x):
+            return float(jnp.sum(x))
+
+        def sync(y):
+            y.block_until_ready()
+    """
+    fs = lint(tmp_path, src, "src/repro/core/state.py")
+    msgs = [f.message for f in unwaived(fs, "FED002")]
+    assert len(msgs) == 2
+    assert any("float()" in m for m in msgs)
+    assert any("block_until_ready" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# FED003 — FMA-contraction hazard
+# ---------------------------------------------------------------------------
+
+# the PR 6 fused-merge shape: acc*corr + upd*w drifted 1 ulp between
+# the (3,P) and (6,P) compilation units
+FED003_FUSED_MERGE = """
+    def merge(acc, corr, upd, w):
+        return acc * corr + upd * w
+"""
+
+
+def test_fed003_fused_merge_regression(tmp_path):
+    fs = lint(tmp_path, FED003_FUSED_MERGE, "src/repro/kernels/fused.py")
+    assert len(unwaived(fs, "FED003")) == 1
+    assert "FMA" in fs[0].message
+
+
+def test_fed003_add_feeding_mul_ok(tmp_path):
+    src = """
+        def dequant(q, snap, scale):
+            return (q + snap) * scale
+    """
+    assert not only(lint(tmp_path, src, "src/repro/kernels/fused.py"),
+                    "FED003")
+
+
+def test_fed003_not_applied_outside_kernels_and_state(tmp_path):
+    assert not only(lint(tmp_path, FED003_FUSED_MERGE,
+                         "src/repro/fl/network.py"), "FED003")
+
+
+def test_fed003_state_host_int_arithmetic_exempt(tmp_path):
+    src = """
+        def nbytes(n, d):
+            return n * d + 16
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/state.py"),
+                    "FED003")
+
+
+def test_fed003_state_traced_context_flagged(tmp_path):
+    src = """
+        import jax.numpy as jnp
+
+        def blend(a, b, t):
+            y = a * t + b
+            return jnp.tanh(y)
+    """
+    fs = lint(tmp_path, src, "src/repro/core/state.py")
+    assert len(unwaived(fs, "FED003")) == 1
+
+
+def test_fed003_tuple_repetition_exempt(tmp_path):
+    src = """
+        def shape(n):
+            return (1,) * n + (2,)
+    """
+    assert not only(lint(tmp_path, src, "src/repro/kernels/fx.py"),
+                    "FED003")
+
+
+def test_fed003_waived(tmp_path):
+    src = FED003_FUSED_MERGE.replace(
+        "return acc * corr + upd * w",
+        "return acc * corr + upd * w  "
+        + waive("FED003", "tolerance-gated"))
+    fs = lint(tmp_path, src, "src/repro/kernels/fused.py")
+    assert not unwaived(fs, "FED003")
+    assert only(fs, "FED003")[0].reason == "tolerance-gated"
+
+
+# ---------------------------------------------------------------------------
+# FED004 — telemetry overhead + catalogue
+# ---------------------------------------------------------------------------
+
+def test_fed004_unguarded_fstring(tmp_path):
+    src = '''
+        def f(tel, n):
+            tel.inc(f"count_{n}", 1)
+    '''
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED004")) == 1
+    assert "f-string" in fs[0].message
+
+
+def test_fed004_enabled_guard_allows_heavy_args(tmp_path):
+    src = '''
+        def f(tel, n):
+            if tel.enabled:
+                tel.inc(f"count_{n}", 1)
+    '''
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED004")
+
+
+def test_fed004_early_return_guard(tmp_path):
+    src = '''
+        def f(tel, n):
+            if not tel.enabled:
+                return
+            tel.span(f"phase_{n}")
+    '''
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED004")
+
+
+def test_fed004_call_bearing_argument(tmp_path):
+    src = '''
+        def f(tel, q):
+            tel.gauge("queue.depth", depth_of(q))
+    '''
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED004")) == 1
+    assert "call-bearing" in fs[0].message
+
+
+def test_fed004_cheap_calls_allowed(tmp_path):
+    src = '''
+        def f(tel, q):
+            tel.gauge("queue.depth", len(q))
+    '''
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED004")
+
+
+def test_fed004_uncatalogued_name(tmp_path):
+    src = '''
+        def f(tel):
+            tel.inc("fl.bogus.counter", 1)
+    '''
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED004")) == 1
+    assert "catalogue" in fs[0].message
+
+
+def test_fed004_counter_prefixes_admitted(tmp_path):
+    src = '''
+        def f(tel):
+            tel.inc("jax.cache.miss", 1)
+            tel.inc("telemetry.dropped_spans", 3)
+    '''
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED004")
+
+
+def test_fed004_catalogue_check_skipped_outside_repro(tmp_path):
+    src = '''
+        def f(tel):
+            tel.inc("synthetic", 1)
+    '''
+    assert not only(lint(tmp_path, src, "tests/fx.py"), "FED004")
+
+
+def test_fed004_handle_assigned_from_tel(tmp_path):
+    src = '''
+        from repro import obs
+
+        def f(n):
+            t = obs.TEL
+            t.inc(f"x_{n}", 1)
+    '''
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED004")) == 1
+
+
+# ---------------------------------------------------------------------------
+# FED005 — recompile hazard
+# ---------------------------------------------------------------------------
+
+def test_fed005_jit_in_per_call_body(tmp_path):
+    src = """
+        import jax
+
+        def step(fn, x):
+            f = jax.jit(fn)
+            return f(x)
+    """
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED005")) == 1
+    assert "step" in fs[0].message
+
+
+def test_fed005_lru_cache_is_cache_evidence(tmp_path):
+    src = """
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def build(n):
+            return jax.jit(make(n))
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED005")
+
+
+def test_fed005_init_and_module_scope_ok(tmp_path):
+    src = """
+        import jax
+
+        STEP = jax.jit(make())
+
+        class Store:
+            def __init__(self):
+                self._prog = jax.jit(make())
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED005")
+
+
+def test_fed005_module_level_loop_flagged(tmp_path):
+    src = """
+        import jax
+
+        for n in (1, 2, 4):
+            PROGS.append(jax.jit(make(n)))
+    """
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED005")) == 1
+    assert "loop" in fs[0].message
+
+
+def test_fed005_dict_cache_is_cache_evidence(tmp_path):
+    src = """
+        import jax
+
+        def get(self, key):
+            if key not in self._progs:
+                self._progs[key] = jax.jit(make(key))
+            return self._progs[key]
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED005")
+
+
+def test_fed005_not_applied_in_launch(tmp_path):
+    src = """
+        import jax
+
+        def step(fn, x):
+            return jax.jit(fn)(x)
+    """
+    assert not only(lint(tmp_path, src, "src/repro/launch/fx.py"),
+                    "FED005")
+
+
+# ---------------------------------------------------------------------------
+# FED006 — nondeterminism sources
+# ---------------------------------------------------------------------------
+
+# the PR 5 regression: builtin hash(str) is PYTHONHASHSEED-salted, so
+# the per-client data salt differed across processes
+FED006_HASH = """
+    def client_salt(name):
+        return hash(name) % 1000
+"""
+
+
+def test_fed006_builtin_hash_regression(tmp_path):
+    fs = lint(tmp_path, FED006_HASH, "src/repro/data/fx.py")
+    assert len(unwaived(fs, "FED006")) == 1
+    assert "PYTHONHASHSEED" in fs[0].message
+
+
+def test_fed006_crc32_salt_ok(tmp_path):
+    src = """
+        import zlib
+
+        def client_salt(name):
+            return zlib.crc32(name.encode()) % 1000
+    """
+    assert not only(lint(tmp_path, src, "src/repro/data/fx.py"),
+                    "FED006")
+
+
+def test_fed006_numpy_default_rng(tmp_path):
+    src = """
+        import numpy as np
+
+        def noise(n):
+            return np.random.rand(n)
+    """
+    fs = lint(tmp_path, src, "src/repro/data/fx.py")
+    assert len(unwaived(fs, "FED006")) == 1
+    assert "default_rng" in fs[0].message
+
+
+def test_fed006_explicit_rng_ok(tmp_path):
+    src = """
+        import numpy as np
+
+        def noise(n, seed):
+            return np.random.default_rng(seed).random(n)
+    """
+    assert not only(lint(tmp_path, src, "src/repro/data/fx.py"),
+                    "FED006")
+
+
+def test_fed006_stdlib_random(tmp_path):
+    src = """
+        import random
+
+        def pick(xs):
+            return random.choice(xs)
+    """
+    assert only(lint(tmp_path, src, "src/repro/fl/fx.py"), "FED006")
+
+
+def test_fed006_time_time_scoping(tmp_path):
+    src = """
+        import time
+
+        def now():
+            return time.time()
+    """
+    assert only(lint(tmp_path, src, "src/repro/core/fx.py"), "FED006")
+    assert not only(lint(tmp_path, src, "benchmarks/fx.py"), "FED006")
+    assert not only(lint(tmp_path, src, "src/repro/launch/fx.py"),
+                    "FED006")
+
+
+def test_fed006_datetime_scoping(tmp_path):
+    src = """
+        import datetime
+
+        def stamp():
+            return datetime.datetime.now()
+    """
+    assert only(lint(tmp_path, src, "src/repro/core/fx.py"), "FED006")
+    assert not only(lint(tmp_path, src, "benchmarks/fx.py"), "FED006")
+
+
+def test_fed006_waived(tmp_path):
+    src = FED006_HASH.replace(
+        "return hash(name) % 1000",
+        "return hash(name) % 1000  "
+        + waive("FED006", "per-process scratch key, never persisted"))
+    fs = lint(tmp_path, src, "src/repro/data/fx.py")
+    assert not unwaived(fs, "FED006")
+
+
+# ---------------------------------------------------------------------------
+# FED007 — broad exception handlers
+# ---------------------------------------------------------------------------
+
+def test_fed007_broad_and_bare(tmp_path):
+    src = """
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+            try:
+                g()
+            except:
+                pass
+            try:
+                g()
+            except (ValueError, BaseException):
+                pass
+    """
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert len(unwaived(fs, "FED007")) == 3
+
+
+def test_fed007_narrow_handler_ok(tmp_path):
+    src = """
+        def f():
+            try:
+                g()
+            except (ValueError, KeyError):
+                pass
+    """
+    assert not only(lint(tmp_path, src, "src/repro/core/fx.py"),
+                    "FED007")
+
+
+def test_fed007_waived(tmp_path):
+    src = """
+        def f():
+            try:
+                g()
+            except Exception:  {w}
+                pass
+    """.format(w=waive("FED007", "sweep harness records and continues"))
+    fs = lint(tmp_path, src, "src/repro/core/fx.py")
+    assert not unwaived(fs, "FED007")
+    assert only(fs, "FED007")[0].waived
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, --select, --json schema
+# ---------------------------------------------------------------------------
+
+def test_cli_clean_exits_zero(tmp_path, capsys):
+    p = tmp_path / "clean.py"
+    p.write_text("x = 1\n")
+    assert fedlint_main([str(p)]) == 0
+    assert "0 unwaived" in capsys.readouterr().out
+
+
+def test_cli_unwaived_exits_one(tmp_path, capsys):
+    p = tmp_path / "dirty.py"
+    p.write_text("def f(name):\n    return hash(name)\n")
+    assert fedlint_main([str(p)]) == 1
+    assert "FED006" in capsys.readouterr().out
+
+
+def test_cli_select_restricts_rules(tmp_path, capsys):
+    p = tmp_path / "dirty.py"
+    p.write_text("def f(name):\n    return hash(name)\n")
+    assert fedlint_main([str(p), "--select", "FED007"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_unknown_code_exits_two(tmp_path, capsys):
+    p = tmp_path / "clean.py"
+    p.write_text("x = 1\n")
+    assert fedlint_main([str(p), "--select", "NOPE"]) == 2
+    assert "unknown rule code" in capsys.readouterr().err
+
+
+def test_cli_missing_path_exits_two(tmp_path, capsys):
+    assert fedlint_main([str(tmp_path / "nope")]) == 2
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert fedlint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in sorted(ALL_CODES):
+        assert code in out
+
+
+def test_cli_json_report_schema(tmp_path, capsys):
+    p = tmp_path / "dirty.py"
+    p.write_text("def f(name):\n    return hash(name)\n")
+    out = tmp_path / "report.json"
+    rc = fedlint_main([str(p), "--json", str(out)])
+    capsys.readouterr()
+    assert rc == 1
+    doc = json.loads(out.read_text())
+    assert doc["fedlint"] == 1
+    assert doc["meta_rule"] == META_RULE
+    assert set(doc["rules"]) == ALL_CODES
+    assert doc["paths"] == [str(p)]
+    s = doc["summary"]
+    assert set(s) == {"files", "total", "waived", "unwaived", "by_rule"}
+    assert s["files"] == 1
+    assert s["total"] == s["waived"] + s["unwaived"]
+    assert s["unwaived"] >= 1
+    for f in doc["findings"]:
+        assert set(f) == {"file", "line", "col", "rule", "message",
+                          "waived", "reason"}
+    assert sum(s["by_rule"].values()) == s["total"]
+
+
+# ---------------------------------------------------------------------------
+# self-check: the shipped tree lints clean (the CI gate, run in-process)
+# ---------------------------------------------------------------------------
+
+def test_fedlint_self_check(monkeypatch, capsys):
+    import pathlib
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    monkeypatch.chdir(repo)
+    rc = fedlint_main(["src", "tests", "benchmarks"])
+    out = capsys.readouterr().out
+    assert rc == 0, "fedlint found unwaived findings:\n" + out
+
+
+# ---------------------------------------------------------------------------
+# catalogue: kinds are disjoint, and a recorded run stays inside it
+# ---------------------------------------------------------------------------
+
+def test_catalogue_kinds_nearly_disjoint():
+    # spans time things, metrics count things: a name may appear in
+    # both namespaces (residency.write_behind is timed AND counts the
+    # demoted rows), but the three metric kinds must never collide —
+    # tel.summary() would silently shadow one with the other.
+    metric_kinds = [catalogue.COUNTERS, catalogue.GAUGES, catalogue.HISTS]
+    for i, a in enumerate(metric_kinds):
+        for b in metric_kinds[i + 1:]:
+            assert not (a & b)
+    span_metric = catalogue.SPANS & (catalogue.COUNTERS
+                                     | catalogue.GAUGES | catalogue.HISTS)
+    assert span_metric <= {"residency.write_behind"}
+    for name in catalogue.ALL:
+        assert catalogue.kind_of(name) != "unknown"
+    assert catalogue.kind_of("fl.response_s{tier=3}") == "hist"
+    assert catalogue.kind_of("jax.cache.hits") == "counter"
+    assert catalogue.kind_of("no.such.stream") == "unknown"
+
+
+def test_recorded_flstats_names_are_catalogued():
+    with obs.tracing() as tel:
+        flstats.record_tiering([[0, 1], [2]], thresholds=[4.0, 8.0])
+        flstats.record_selection([(0, 0), (2, 1)], population=3)
+        flstats.record_response(1, 3.0, 4.0, timed_out=False)
+        flstats.record_straggler("dropped", tier=1)
+        flstats.record_staleness([0, 2], [0, 1])
+        flstats.record_uplink(1024, tier=0)
+        flstats.record_client_updates([0, 2])
+    recorded = [("counter", n) for n in tel.counters] + \
+               [("gauge", n) for n in tel.gauges] + \
+               [("hist", n) for n in tel.hists]
+    known = {"counter": catalogue.COUNTERS, "gauge": catalogue.GAUGES,
+             "hist": catalogue.HISTS}
+    assert recorded
+    for kind, name in recorded:
+        base, _labels = flstats.parse_label(name)
+        ok = base in known[kind] or (
+            kind == "counter"
+            and base.startswith(catalogue.COUNTER_PREFIXES))
+        assert ok, (kind, name)

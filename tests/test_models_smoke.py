@@ -2,18 +2,16 @@
 family — one forward + one train step + one decode step on CPU, asserting
 output shapes and no NaNs."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import get_arch
 from repro.config.base import TrainConfig
 from repro.launch.steps import make_train_step
 from repro.models import (cnn_forward, decode_step, forward, init_cnn,
-                          init_decode_state, init_model, lm_loss)
+                          init_decode_state, init_model)
 
 pytestmark = pytest.mark.slow  # one train step per zoo arch, ~5-10 s each
 

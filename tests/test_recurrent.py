@@ -8,8 +8,7 @@ import pytest
 
 from repro.kernels.ref import ssm_scan_ref
 from repro.models.ssm import init_ssm, ssm_core, ssm_decode_step, ssm_forward
-from repro.models.xlstm import (init_mlstm, init_slstm, mlstm_core,
-                                slstm_scan)
+from repro.models.xlstm import init_slstm, mlstm_core, slstm_scan
 
 KEY = jax.random.PRNGKey(0)
 

@@ -22,7 +22,6 @@ from repro.core.baselines import run_fedasync, run_fedbuff
 from repro.core.residency import (DiskColdTier, HostColdTier,
                                   TieredClientStateStore)
 from repro.core.state import ClientStateStore
-from repro.fl.network import WirelessNetwork
 from repro.fl.testing import SyntheticCohortTrainer
 from repro.runtime.async_loop import run_feddct_async
 

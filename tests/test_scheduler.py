@@ -1,10 +1,9 @@
 """FedDCT scheduler mechanics with a fake (instant) trainer."""
 
 import numpy as np
-import pytest
 
 from repro.config.base import FLConfig
-from repro.core.baselines import run_fedavg, run_fedasync, run_tifl
+from repro.core.baselines import run_fedasync, run_fedavg, run_tifl
 from repro.core.scheduler import run_feddct
 from repro.fl.network import WirelessNetwork
 

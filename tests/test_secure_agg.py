@@ -1,10 +1,8 @@
 """Secure aggregation: masks cancel exactly; server sees only noise per
 client; drops into FedDCT's survivor-set round."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.aggregation import weighted_average
 from repro.core.secure_agg import _mask_like, mask_update, secure_aggregate

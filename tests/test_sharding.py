@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.config import get_arch
-from repro.config.base import INPUT_SHAPES, TrainConfig
+from repro.config.base import INPUT_SHAPES
 from repro.launch.steps import abstract_params, input_specs
 from repro.sharding import batch_specs, param_specs
 from repro.sharding.hints import axis_size, hint, set_mesh
@@ -33,7 +33,6 @@ def _leaves_with_specs(arch, mesh):
 def test_specs_divide_shapes(arch, mesh11):
     """Every assigned axis must divide its dim for every arch (checked on
     the production mesh sizes via a fake size table)."""
-    import repro.sharding.rules as R
     params = abstract_params(get_arch(arch))       # FULL config
     # emulate the 16x16 production mesh without 256 devices
     class FakeMesh:

@@ -18,9 +18,9 @@ from repro.core.baselines import run_fedasync, run_fedbuff
 from repro.core.engine import make_engine
 from repro.core.state import ClientStateStore
 from repro.fl.network import WirelessNetwork
+from repro.fl.testing import SyntheticCohortTrainer
 from repro.kernels.ops import quantize_rows
 from repro.kernels.ref import dequantize_rows_ref, quantize_rows_ref
-from repro.fl.testing import SyntheticCohortTrainer
 from repro.runtime.async_loop import run_feddct_async
 
 

@@ -6,13 +6,12 @@ import numpy as np
 import pytest
 
 from repro.config import get_arch
-from repro.config.base import INPUT_SHAPES, TrainConfig
+from repro.config.base import INPUT_SHAPES
 from repro.launch.steps import (abstract_decode_state, abstract_opt_state,
                                 abstract_params, input_specs, model_flops,
                                 swa_window_for)
 from repro.roofline import analyze_hlo, roofline_terms
-from repro.roofline.analysis import (_dot_flops, _shape_bytes,
-                                     _split_computations, _trip_count)
+from repro.roofline.analysis import _shape_bytes, _trip_count
 
 
 def test_input_specs_shapes():
